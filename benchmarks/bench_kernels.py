@@ -1,0 +1,78 @@
+"""Kernel micro-benchmarks (CPU: oracle wall-time + kernel-vs-oracle check;
+on TPU the same harness times the Pallas kernels)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.kernels.flash_attention.ref import flash_ref
+from repro.kernels.sgmv.ops import sgmv_apply
+from repro.kernels.sgmv.ref import sgmv_ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    # SGMV: 64 rows, llama-7b-ish dims, 8 adapters rank 16
+    R, D, r, O, N = 64, 4096, 16, 4096, 8
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (R, D), jnp.float32)
+    a = jax.random.normal(ks[1], (N, D, r), jnp.float32) * 0.02
+    b = jax.random.normal(ks[2], (N, r, O), jnp.float32) * 0.02
+    idx = jax.random.randint(ks[3], (R,), 0, N)
+    ref = jax.jit(lambda *t: sgmv_ref(*t))
+    t_ref = _time(ref, x, a, b, idx)
+    out_k = sgmv_apply(x, a, b, idx)
+    err = float(jnp.max(jnp.abs(out_k - sgmv_ref(x, a, b, idx))))
+    flops = 2 * R * D * r + 2 * R * r * O
+    rows.append(csv_row("kernels/sgmv_ref", t_ref * 1e6,
+                        f"gflops={flops / t_ref / 1e9:.2f} "
+                        f"kernel_max_err={err:.2e}"))
+    # flash attention 1k×1k
+    B, H, K, T, hd = 1, 8, 2, 1024, 128
+    q = jax.random.normal(ks[0], (B, H, T, hd), jnp.float32)
+    kk = jax.random.normal(ks[1], (B, K, T, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, K, T, hd), jnp.float32)
+    refa = jax.jit(lambda *t: flash_ref(*t))
+    t_att = _time(refa, q, kk, v)
+    aflops = 4 * B * H * T * T * hd
+    rows.append(csv_row("kernels/flash_ref", t_att * 1e6,
+                        f"gflops={aflops / t_att / 1e9:.2f}"))
+    # decode GQA attention over a 4k ring cache
+    from repro.kernels.decode_attention.ops import decode_gqa
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+    B, H, K, S, hd = 8, 32, 8, 4096, 128
+    qd = jax.random.normal(ks[0], (B, H, hd), jnp.float32)
+    kd = jax.random.normal(ks[1], (B, S, K, hd), jnp.float32)
+    vd = jax.random.normal(ks[2], (B, S, K, hd), jnp.float32)
+    spos = jnp.arange(S, dtype=jnp.int32)
+    pos = jnp.array(S - 1, jnp.int32)
+    refd = jax.jit(lambda *t: decode_attention_ref(*t))
+    t_dec = _time(refd, qd, kd, vd, spos, pos)
+    out_k = decode_gqa(qd[:1], kd[:1, :512], vd[:1, :512], spos[:512],
+                       jnp.array(511, jnp.int32))
+    err = float(jnp.max(jnp.abs(
+        out_k - decode_attention_ref(qd[:1], kd[:1, :512], vd[:1, :512],
+                                     spos[:512], jnp.array(511)))))
+    dflops = 4 * B * H * S * hd
+    rows.append(csv_row("kernels/decode_attn_ref", t_dec * 1e6,
+                        f"gflops={dflops / t_dec / 1e9:.2f} "
+                        f"kernel_max_err={err:.2e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

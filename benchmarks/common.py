@@ -1,0 +1,65 @@
+"""Shared benchmark scaffolding: the paper's evaluation setup (§6.1) mapped
+onto the simulator — 4 Llama2-7B LoRA functions + 4 Llama2-13B LoRA
+functions, Azure-like traces in three CoV patterns, TPU-slice cluster.
+"""
+from __future__ import annotations
+
+import copy
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs import get_config
+from repro.models.config import ModelConfig
+from repro.serverless import baselines as B
+from repro.serverless.cluster import Cluster
+from repro.serverless.latency import SLICE_HW
+from repro.serverless.simulator import FunctionDef, SimResult, Simulator
+from repro.serverless.traces import TraceSpec, make_workload
+
+PATTERNS = ("predictable", "normal", "bursty")
+SLO_7B, SLO_13B = 2.5, 4.0
+
+
+def paper_functions() -> List[FunctionDef]:
+    l7 = get_config("llama2_7b")
+    l13 = get_config("llama2_13b")
+    return ([FunctionDef(f"fn7-{i}", "llama2-7b", l7) for i in range(4)] +
+            [FunctionDef(f"fn13-{i}", "llama2-13b", l13) for i in range(4)])
+
+
+def paper_workload(pattern: str, duration: float = 1800.0,
+                   seed: int = 7, rate_scale: float = 1.0) -> List[Dict]:
+    specs = ([TraceSpec(f"fn7-{i}", pattern, 0.02 * rate_scale, duration,
+                        prompt_len=512, output_len=48, slo_ttft=SLO_7B)
+              for i in range(4)] +
+             [TraceSpec(f"fn13-{i}", pattern, 0.012 * rate_scale, duration,
+                        prompt_len=512, output_len=48, slo_ttft=SLO_13B)
+              for i in range(4)])
+    return make_workload(specs, seed=seed)
+
+
+def paper_cluster(n_slices: int = 4) -> Cluster:
+    return Cluster(num_nodes=1, gpus_per_node=n_slices, containers_per_gpu=2,
+                   hbm_bytes=SLICE_HW.hbm_bytes,
+                   host_bytes=SLICE_HW.host_mem_bytes)
+
+
+ALL_POLICIES = [B.SERVERLESS_LORA, B.SERVERLESS_LLM, B.INSTAINFER,
+                B.VLLM, B.DLORA]
+SERVERLESS_POLICIES = [B.SERVERLESS_LORA, B.SERVERLESS_LLM, B.INSTAINFER]
+
+
+def run_policy(policy, workload: List[Dict],
+               functions: Optional[List[FunctionDef]] = None,
+               n_slices: int = 4) -> Tuple[SimResult, float]:
+    """Returns (result, wall_seconds_per_simulated_request)."""
+    fns = functions or paper_functions()
+    sim = Simulator(fns, policy, cluster=paper_cluster(n_slices))
+    t0 = time.monotonic()
+    res = sim.run(copy.deepcopy(workload))
+    wall = time.monotonic() - t0
+    return res, wall / max(len(workload), 1)
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

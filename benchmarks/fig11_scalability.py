@@ -1,0 +1,31 @@
+"""Fig. 11 — scalability: (a) strong — fixed workload, growing cluster;
+(b) weak — workload and cluster grow together.  Paper claims: Serverless-
+LoRA converts added GPU into lower latency (strong) and holds E2E flat
+(weak)."""
+from __future__ import annotations
+
+from benchmarks.common import (SERVERLESS_POLICIES, csv_row, paper_functions,
+                               paper_workload, run_policy)
+
+
+def run(duration: float = 1200.0):
+    rows = []
+    wl = paper_workload("normal", duration)
+    for n in (2, 4, 8):
+        for pol in SERVERLESS_POLICIES:
+            res, wall = run_policy(pol, wl, n_slices=n)
+            rows.append(csv_row(
+                f"fig11a_strong/slices{n}/{pol.name}", wall * 1e6,
+                f"e2e_ms={res.mean_e2e * 1000:.0f} ce={res.cost_effectiveness:.4f}"))
+    for scale, n in ((0.5, 2), (1.0, 4), (2.0, 8)):
+        wl = paper_workload("normal", duration, rate_scale=scale)
+        for pol in SERVERLESS_POLICIES:
+            res, wall = run_policy(pol, wl, n_slices=n)
+            rows.append(csv_row(
+                f"fig11b_weak/x{scale}/{pol.name}", wall * 1e6,
+                f"e2e_ms={res.mean_e2e * 1000:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,26 @@
+"""Fig. 12 — SLO violation rate (TTFT SLO = ParaServe-style 5× warm TTFT).
+Paper claims: ServerlessLoRA worst-case ~10%; baselines up to 45–58%."""
+from __future__ import annotations
+
+from benchmarks.common import (PATTERNS, SERVERLESS_POLICIES, csv_row,
+                               paper_workload, run_policy)
+
+
+def run(duration: float = 1800.0):
+    rows = []
+    for pattern in PATTERNS:
+        wl = paper_workload(pattern, duration)
+        for pol in SERVERLESS_POLICIES:
+            res, wall = run_policy(pol, wl)
+            ok = [r for r in res.requests if r.first_token >= 0]
+            ttfts = sorted(r.first_token - r.arrival for r in ok)
+            p50 = ttfts[len(ttfts) // 2] if ttfts else 0
+            rows.append(csv_row(
+                f"fig12_slo/{pattern}/{pol.name}", wall * 1e6,
+                f"violation_pct={100 * res.slo_violation_rate:.1f} "
+                f"p50_ms={p50 * 1000:.0f} p99_ms={res.p99_ttft * 1000:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

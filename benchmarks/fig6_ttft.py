@@ -1,0 +1,31 @@
+"""Fig. 6 — average TTFT of each serverless solution per arrival pattern.
+Paper claim: ServerlessLoRA accelerates TTFT up to 4.7× vs ServerlessLLM and
+7.1× vs InstaInfer."""
+from __future__ import annotations
+
+from benchmarks.common import (PATTERNS, SERVERLESS_POLICIES, csv_row,
+                               paper_workload, run_policy)
+
+
+def run(duration: float = 1800.0):
+    rows = []
+    derived = {}
+    for pattern in PATTERNS:
+        wl = paper_workload(pattern, duration)
+        for pol in SERVERLESS_POLICIES:
+            res, wall = run_policy(pol, wl)
+            rows.append(csv_row(f"fig6_ttft/{pattern}/{pol.name}",
+                                wall * 1e6,
+                                f"ttft_ms={res.mean_ttft * 1000:.0f}"))
+            derived[(pattern, pol.name)] = res.mean_ttft
+    for pattern in PATTERNS:
+        ours = derived[(pattern, "ServerlessLoRA")]
+        for other in ("ServerlessLLM", "InstaInfer"):
+            x = derived[(pattern, other)] / max(ours, 1e-9)
+            rows.append(csv_row(f"fig6_ttft/{pattern}/speedup_vs_{other}",
+                                0.0, f"x={x:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

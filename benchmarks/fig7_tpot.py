@@ -1,0 +1,22 @@
+"""Fig. 7 — average TPOT. Paper claim: ServerlessLoRA's TPOT is ≤ ~12%
+higher than baselines (larger adaptive batches), still within SLO."""
+from __future__ import annotations
+
+from benchmarks.common import (PATTERNS, SERVERLESS_POLICIES, csv_row,
+                               paper_workload, run_policy)
+
+
+def run(duration: float = 1800.0):
+    rows = []
+    for pattern in PATTERNS:
+        wl = paper_workload(pattern, duration)
+        for pol in SERVERLESS_POLICIES:
+            res, wall = run_policy(pol, wl)
+            rows.append(csv_row(f"fig7_tpot/{pattern}/{pol.name}",
+                                wall * 1e6,
+                                f"tpot_ms={res.mean_tpot * 1000:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

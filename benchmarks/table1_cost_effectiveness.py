@@ -1,0 +1,37 @@
+"""Table 1 / Fig. 9 — E2E latency, monetary cost, and cost-effectiveness
+(relative to vLLM) for all five solutions × three patterns.
+Paper claims: cost ↓ up to 89% vs baselines; CE up to 12.7× ServerlessLLM /
+19.3× InstaInfer; CE 3.7–7.3× vLLM."""
+from __future__ import annotations
+
+from benchmarks.common import (ALL_POLICIES, PATTERNS, csv_row,
+                               paper_workload, run_policy)
+
+
+def run(duration: float = 1800.0):
+    rows = []
+    for pattern in PATTERNS:
+        wl = paper_workload(pattern, duration)
+        results = {}
+        for pol in ALL_POLICIES:
+            res, wall = run_policy(pol, wl)
+            results[pol.name] = res
+            rows.append(csv_row(
+                f"table1/{pattern}/{pol.name}", wall * 1e6,
+                f"e2e_ms={res.mean_e2e * 1000:.0f} cost=${res.dollars:.3f} "
+                f"ce={res.cost_effectiveness:.4f}"))
+        base = results["vLLM"].cost_effectiveness
+        for name, res in results.items():
+            rows.append(csv_row(
+                f"table1/{pattern}/{name}/ce_rel_vllm", 0.0,
+                f"x={res.cost_effectiveness / max(base, 1e-12):.2f}"))
+        ours = results["ServerlessLoRA"]
+        for other in ("ServerlessLLM", "InstaInfer", "vLLM"):
+            cut = 1 - ours.dollars / max(results[other].dollars, 1e-12)
+            rows.append(csv_row(f"table1/{pattern}/cost_cut_vs_{other}",
+                                0.0, f"pct={100 * cut:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

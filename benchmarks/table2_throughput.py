@@ -1,0 +1,42 @@
+"""Table 2 — peak throughput (output tokens/s, peak batch size, requests/s)
+for the Llama2-7B functions on 2 accelerators.  Paper claims: 1.65× tokens/s,
+2.28× peak batch, up to 3.02× requests/s vs ServerlessLLM/InstaInfer — the
+win comes from backbone sharing freeing HBM for KV cache."""
+from __future__ import annotations
+
+import copy
+
+from benchmarks.common import SERVERLESS_POLICIES, csv_row, paper_cluster
+from repro.configs import get_config
+from repro.serverless.simulator import FunctionDef, Simulator
+from repro.serverless.traces import TraceSpec, make_workload
+
+
+def run(duration: float = 600.0):
+    rows = []
+    l7 = get_config("llama2_7b")
+    fns = [FunctionDef(f"fn7-{i}", "llama2-7b", l7) for i in range(4)]
+    # offered load far above capacity: the measured completion rate is the
+    # system's PEAK throughput (the paper's Table-2 methodology); the win
+    # comes from HBM freed by sharing → larger memory-capped batches
+    duration = min(duration, 120.0)
+    specs = [TraceSpec(f"fn7-{i}", "predictable", 25.0, duration,
+                       prompt_len=512, output_len=48, slo_ttft=30.0)
+             for i in range(4)]
+    wl = make_workload(specs, seed=3)
+    for pol in SERVERLESS_POLICIES:
+        sim = Simulator(fns, pol, cluster=paper_cluster(2))
+        res = sim.run(copy.deepcopy(wl))
+        horizon = max(r.done for r in res.requests if r.done > 0)
+        toks = res.throughput_tokens_per_s(horizon)
+        reqs = len([r for r in res.requests if r.done > 0]) / horizon
+        peak_b = max(sim._profiles[f.fn_id].max_batch for f in fns)
+        rows.append(csv_row(
+            f"table2/{pol.name}", 0.0,
+            f"tokens_per_s={toks:.0f} peak_batch={peak_b} "
+            f"req_per_s={reqs:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

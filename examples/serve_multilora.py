@@ -1,0 +1,87 @@
+"""End-to-end serving driver: a warm ServerlessLoRA function pool serving
+batched requests across multiple LoRA adapters on one shared backbone —
+the request-serving stage of the paper's workflow (steps 4–7) with REAL
+JAX execution (prefill + decode), plus the adaptive batching scheduler
+deciding batch sizes/delays from the calibrated profile.
+
+Run: PYTHONPATH=src python examples/serve_multilora.py [--requests 24]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core.engine import InferenceEngine
+from repro.models import transformer as tf
+from repro.serverless.batching import (BatchingScheduler, BatchProfile,
+                                       Request)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--adapters", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_smoke("llama2_7b").with_(name="serve-demo")
+    key = jax.random.PRNGKey(0)
+    params = tf.init_params(key, cfg, lora_adapters=args.adapters)
+    eng = InferenceEngine(cfg, params, max_context=96)
+
+    # adaptive batching: profile from a real measured prefill
+    toks = jax.random.randint(key, (1, 32), 0, cfg.vocab_size)
+    t0 = time.perf_counter()
+    eng.prefill(toks, jnp.zeros((1,), jnp.int32))
+    t_one = time.perf_counter() - t0
+    prof = BatchProfile(t0=t_one, alpha=t_one * 0.1, max_batch=8)
+    sched = BatchingScheduler(adaptive=True)
+    rng = np.random.default_rng(0)
+
+    print(f"profile: T0={prof.t0 * 1000:.1f}ms α={prof.alpha * 1000:.2f}ms "
+          f"B_max={prof.max_batch}")
+
+    # synthetic request stream: one queue per adapter-function
+    for a in range(args.adapters):
+        sched.register(f"fn{a}", prof)
+    now = 0.0
+    reqs = []
+    for i in range(args.requests):
+        r = Request(req_id=i, fn_id=f"fn{rng.integers(args.adapters)}",
+                    arrival=now, prompt_len=32, output_len=args.max_new,
+                    slo_ttft=2.5)
+        reqs.append(r)
+        sched.push(r)
+        now += float(rng.exponential(0.01))
+
+    served = 0
+    t_start = time.perf_counter()
+    while served < args.requests:
+        ready = sched.ready_queues(now)
+        if not ready:
+            nt = sched.next_timer(now)
+            now = nt if nt is not None else now + 0.01
+            continue
+        for q in ready:
+            batch = q.pop_batch()
+            if not batch:
+                continue
+            b = len(batch)
+            a_idx = jnp.full((b,), int(q.fn_id[2:]), jnp.int32)
+            prompts = jax.random.randint(
+                jax.random.PRNGKey(served), (b, 32), 0, cfg.vocab_size)
+            out, _ = eng.generate(prompts, args.max_new, adapter_idx=a_idx)
+            served += b
+            print(f"t={now:7.3f}s dispatched {q.fn_id} batch={b} "
+                  f"out={out.shape} first tokens={list(map(int, out[:, 0]))}")
+    wall = time.perf_counter() - t_start
+    toks = served * args.max_new
+    print(f"\nserved {served} requests / {toks} tokens in {wall:.2f}s "
+          f"({toks / wall:.1f} tok/s on CPU)")
+
+
+if __name__ == "__main__":
+    main()

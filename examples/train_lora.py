@@ -1,0 +1,69 @@
+"""End-to-end training driver: pretrain a ~small backbone on a synthetic
+corpus for a few hundred steps, then LoRA-fine-tune it on a shifted
+distribution with the backbone frozen — producing exactly the artifact pair
+(backbone checkpoint + adapter checkpoint) the serverless system serves.
+
+Run: PYTHONPATH=src python examples/train_lora.py [--steps 200]
+"""
+import argparse
+import os
+
+import jax
+
+from repro.checkpoint.store import checkpoint_manifest, save_checkpoint
+from repro.configs import get_smoke
+from repro.data.pipeline import lm_batches, synthetic_corpus
+from repro.models import transformer as tf
+from repro.training.adamw import AdamW, cosine_schedule
+from repro.training.train import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--lora-steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--out", default="/tmp/serverless_lora_ckpts")
+    args = ap.parse_args()
+
+    cfg = get_smoke("smollm_360m").with_(name="smol-demo", vocab_size=512)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"model: {cfg.name} ({n / 1e6:.2f}M params)")
+
+    # --- stage 1: pretrain the backbone -----------------------------------
+    corpus = synthetic_corpus(cfg.vocab_size, 200_000, seed=3)
+    params, hist = train_loop(
+        cfg, params, lm_batches(corpus, args.batch, args.seq, seed=1),
+        steps=args.steps, lora_only=False,
+        opt=AdamW(lr=cosine_schedule(3e-3, 20, args.steps)), log_every=25)
+    print(f"pretrain loss: {hist[0]:.3f} -> {hist[-1]:.3f}")
+
+    # --- stage 2: LoRA fine-tune on a different distribution --------------
+    corpus_ft = synthetic_corpus(cfg.vocab_size, 100_000, seed=11,
+                                 order=3, zipf_a=1.15)
+    params, hist_ft = train_loop(
+        cfg, params, lm_batches(corpus_ft, args.batch, args.seq, seed=2),
+        steps=args.lora_steps, lora_only=True,
+        opt=AdamW(lr=cosine_schedule(2e-3, 10, args.lora_steps)),
+        log_every=25)
+    head = sum(hist_ft[:10]) / min(len(hist_ft), 10)
+    tail = sum(hist_ft[-10:]) / min(len(hist_ft), 10)
+    print(f"LoRA fine-tune loss: {head:.3f} -> {tail:.3f} (10-step means)")
+    assert tail < head, "fine-tuning must reduce loss"
+
+    # --- stage 3: checkpoint backbone + adapter separately -----------------
+    os.makedirs(args.out, exist_ok=True)
+    nbytes = save_checkpoint(os.path.join(args.out, "model"), params,
+                             {"config": cfg.name})
+    man = checkpoint_manifest(params)
+    print(f"checkpoint: {nbytes / 1e6:.2f} MB — backbone "
+          f"{man['backbone_bytes'] / 1e6:.2f} MB, adapter "
+          f"{man['adapter_bytes'] / 1e6:.3f} MB "
+          f"({100 * man['adapter_bytes'] / man['total_bytes']:.2f}% — the "
+          f"paper's 99%-redundancy observation)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Checkpointing: flat-key npz tensors + msgpack metadata.
+
+Doubles as the artifact-size ground truth for the serverless loading-latency
+model: ``checkpoint_manifest`` reports per-artifact byte sizes (backbone vs
+each adapter) exactly as the Pre-Loading Scheduler consumes them.
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lora import partition_lora
+
+Params = Dict[str, Any]
+_SEP = "/"
+
+
+def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}{_SEP}"))
+    elif isinstance(tree, (tuple, list)):
+        if not tree:
+            out[f"{prefix}__empty_tuple__"] = np.zeros((0,), np.int8)
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}#{i}{_SEP}"))
+    elif tree is None:
+        pass
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]) -> Params:
+    root: Dict = {}
+    for key, val in flat.items():
+        parts = key.split(_SEP)
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(val)
+
+    def fix(node):
+        if isinstance(node, dict) and list(node) == ["__empty_tuple__"]:
+            return ()
+        if isinstance(node, dict) and node and all(
+                k.startswith("#") for k in node):
+            return tuple(fix(node[f"#{i}"]) for i in range(len(node)))
+        if isinstance(node, dict):
+            return {k: fix(v) for k, v in node.items()}
+        return node
+
+    return fix(root)
+
+
+def save_checkpoint(path: str, params: Params,
+                    meta: Optional[Dict] = None) -> int:
+    """Writes <path>.npz (+ .json metadata). Returns bytes written."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(params)
+    # bf16 isn't npz-native: view as uint16 with a dtype tag
+    tagged = {}
+    dtypes = {}
+    for k, v in flat.items():
+        if v.dtype == jnp.bfloat16:
+            tagged[k] = v.view(np.uint16)
+            dtypes[k] = "bfloat16"
+        else:
+            tagged[k] = v
+            dtypes[k] = str(v.dtype)
+    np.savez(path + ".npz", **tagged)
+    with open(path + ".json", "w") as f:
+        json.dump({"dtypes": dtypes, "meta": meta or {}}, f)
+    return os.path.getsize(path + ".npz")
+
+
+def load_checkpoint(path: str) -> Tuple[Params, Dict]:
+    with open(path + ".json") as f:
+        info = json.load(f)
+    flat = {}
+    with np.load(path + ".npz") as z:
+        for k in z.files:
+            arr = z[k]
+            if info["dtypes"].get(k) == "bfloat16":
+                arr = arr.view(jnp.bfloat16)
+            flat[k] = arr
+    return _unflatten(flat), info.get("meta", {})
+
+
+def checkpoint_manifest(params: Params) -> Dict[str, int]:
+    """Byte sizes of the separately-loadable artifacts (paper's taxonomy)."""
+    backbone, adapters = partition_lora(params)
+    nbytes = lambda t: int(sum(x.nbytes for x in jax.tree_util.tree_leaves(t)
+                               if x is not None))
+    return {"backbone_bytes": nbytes(backbone),
+            "adapter_bytes": nbytes(adapters),
+            "total_bytes": nbytes(params)}

@@ -1,0 +1,50 @@
+"""Architecture config registry: ``get_config(arch)`` / ``get_smoke(arch)``.
+
+Ten assigned architectures (public-literature pool, sources cited in each
+module) plus the paper's own Llama-2 7B/13B serving configs.  Every module
+exports CONFIG (the exact full-scale config — exercised only via the
+abstract dry-run) and SMOKE (a reduced same-family variant: ≤2 layers,
+d_model ≤ 512, ≤4 experts — runs a real forward/train step on CPU).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "recurrentgemma_9b",
+    "phi3_medium_14b",
+    "qwen2_5_3b",
+    "nemotron_4_340b",
+    "mixtral_8x22b",
+    "grok_1_314b",
+    "whisper_medium",
+    "smollm_360m",
+    "mamba2_780m",
+    "paligemma_3b",
+    # the paper's own evaluation models
+    "llama2_7b",
+    "llama2_13b",
+]
+
+ASSIGNED_ARCHS = ARCH_IDS[:10]
+
+
+def _norm(arch: str) -> str:
+    return arch.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_norm(arch)}")
+    return mod.CONFIG
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_norm(arch)}")
+    return mod.SMOKE
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

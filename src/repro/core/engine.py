@@ -1,0 +1,109 @@
+"""Multi-LoRA inference engine: batched prefill/decode with per-request
+adapter selection over a shared backbone (unmerged LoRA, paper §4.4).
+
+The engine is what a warm serverless function instance runs: jitted
+prefill + decode steps, greedy generation via ``lax.scan``. Per-request
+``adapter_idx`` routes each row of the batch through its own LoRA adapter
+while every row reads the same backbone tensors.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+from repro.models.cache import effective_cache_len
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """(params, tokens, cache [, embeds/frame_embeds, adapter_idx])
+    -> (last-token logits, filled cache)."""
+
+    def prefill_step(params, tokens, cache, *, embeds=None, frame_embeds=None,
+                     adapter_idx=None):
+        logits, cache, _ = tf.forward(
+            params, cfg, tokens, cache=cache, embeds=embeds,
+            frame_embeds=frame_embeds, adapter_idx=adapter_idx,
+            last_only=True)
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """ONE-token decode against an existing cache — the unit the decode
+    input shapes lower (decode_32k / long_500k)."""
+
+    def serve_step(params, token, cache, pos, *, adapter_idx=None):
+        return tf.decode_step(params, cfg, token, cache, pos,
+                              adapter_idx=adapter_idx)
+
+    return serve_step
+
+
+class InferenceEngine:
+    """Warm-function inference over a shared backbone.
+
+    params: full tree whose LoRA leaves are stacked (N, ...) multi-adapter
+    banks (see core.lora.stack_adapters); requests carry adapter indices.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Params, *,
+                 max_context: int = 2048, donate_cache: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.max_context = max_context
+        prefill = make_prefill_step(cfg)
+        serve = make_serve_step(cfg)
+        self._prefill = jax.jit(
+            lambda p, t, c, ai: prefill(p, t, c, adapter_idx=ai))
+        self._decode = jax.jit(
+            lambda p, t, c, pos, ai: serve(p, t, c, pos, adapter_idx=ai),
+            donate_argnums=(2,) if donate_cache else ())
+
+        def gen_loop(params, first_tok, cache, start_pos, adapter_idx, steps):
+            def body(carry, _):
+                tok, cache, pos = carry
+                logits, cache = serve(params, tok, cache, pos,
+                                      adapter_idx=adapter_idx)
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return (nxt, cache, pos + 1), nxt
+
+            (_, cache, _), toks = jax.lax.scan(
+                body, (first_tok, cache, start_pos), None, length=steps)
+            return toks.T, cache  # (B, steps)
+
+        self._gen_loop = jax.jit(gen_loop, static_argnames=("steps",),
+                                 donate_argnums=(2,))
+
+    def new_cache(self, batch: int, context_len: Optional[int] = None):
+        return tf.init_cache(self.cfg, batch, context_len or self.max_context)
+
+    def prefill(self, tokens, adapter_idx=None, cache=None):
+        """tokens: (B, T) int32; adapter_idx: (B,) int32 or None."""
+        if cache is None:
+            cache = self.new_cache(tokens.shape[0])
+        logits, cache = self._prefill(self.params, tokens, cache, adapter_idx)
+        return logits, cache
+
+    def generate(self, tokens, max_new_tokens: int, adapter_idx=None
+                 ) -> Tuple[jnp.ndarray, Dict]:
+        """Greedy generation. Returns ((B, max_new_tokens) int32, cache)."""
+        B, T = tokens.shape
+        logits, cache = self.prefill(tokens, adapter_idx)
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if max_new_tokens == 1:
+            return first[:, None], cache
+        rest, cache = self._gen_loop(self.params, first, cache,
+                                     jnp.array(T, jnp.int32), adapter_idx,
+                                     max_new_tokens - 1)
+        return jnp.concatenate([first[:, None], rest], axis=1), cache
+
+    def decode_one(self, token, cache, pos, adapter_idx=None):
+        return self._decode(self.params, token, cache, pos, adapter_idx)

@@ -1,0 +1,42 @@
+"""Jitted wrapper: cache-layout adaptation for the decode-attention kernel.
+
+Engine cache layout is (B, S, K, hd); the kernel wants contiguous
+per-kv-head sequence tiles (B, K, S, hd).  Off-TPU runs interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attn import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("window", "s_block",
+                                             "use_kernel"))
+def decode_gqa(q, k, v, slot_pos, pos, *, window: Optional[int] = None,
+               s_block: int = 512, use_kernel: bool = True):
+    """q: (B, H, hd); k, v: (B, S, K, hd) (engine cache layout);
+    slot_pos: (S,) int32; pos: () int32.  Returns (B, H, hd)."""
+    if not use_kernel:
+        return decode_attention_ref(q, k, v, slot_pos, pos, window=window)
+    B, H, hd = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    sb = min(s_block, S)
+    pad = (-S) % sb
+    kt = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    vt = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    sp = jnp.pad(slot_pos, (0, pad), constant_values=-1)
+    qk = q.reshape(B, K, G, hd)
+    o = decode_attention(qk, kt, vt, sp, pos.astype(jnp.int32),
+                         window=window, s_block=sb,
+                         interpret=not _on_tpu())
+    return o.reshape(B, H, hd)

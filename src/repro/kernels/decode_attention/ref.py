@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for single-token GQA decode attention over a ring cache.
+
+One query token per sequence attends to a KV cache whose slots carry
+absolute positions (``slot_pos``; −1 = empty).  Valid slots: 0 ≤ slot_pos
+≤ pos (and > pos − window for sliding-window archs).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, slot_pos, pos, *,
+                         window: Optional[int] = None):
+    """q: (B, H, hd); k, v: (B, S, K, hd); slot_pos: (S,) int32; pos: ().
+    Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    ok = (slot_pos >= 0) & (slot_pos <= pos)
+    if window is not None:
+        ok = ok & (slot_pos > pos - window)
+    s = jnp.where(ok[None, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", w, v.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the blocked flash-attention kernel.
+
+Dense softmax attention with causal and optional sliding-window masking,
+GQA-aware (q heads grouped onto kv heads).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+import jax
+
+
+def flash_ref(q, k, v, *, causal: bool = True,
+              window: Optional[int] = None):
+    """q: (B, H, Tq, hd); k, v: (B, K, Tk, hd). Returns (B, H, Tq, hd)."""
+    B, H, Tq, hd = q.shape
+    K = k.shape[1]
+    G = H // K
+    qg = q.reshape(B, K, G, Tq, hd)
+    s = jnp.einsum("bkgqh,bksh->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    qp = jnp.arange(Tq)[:, None]
+    kp = jnp.arange(k.shape[2])[None, :]
+    ok = jnp.ones((Tq, k.shape[2]), bool)
+    if causal:
+        ok = ok & (kp <= qp)
+    if window is not None:
+        ok = ok & (kp > qp - window)
+    s = jnp.where(ok[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksh->bkgqh", w, v.astype(jnp.float32))
+    return o.reshape(B, H, Tq, hd).astype(q.dtype)

@@ -1,0 +1,75 @@
+"""Jitted public wrappers for SGMV: sort-by-adapter batching + kernel call.
+
+``sgmv_apply`` is the drop-in multi-LoRA projection used by the engine:
+it takes an *unsorted* batch with per-row adapter ids, scatters rows into
+adapter-pure blocks (sort + per-segment pad to the row-block size — the
+scheduler-side contract of the TPU kernel), runs the kernel, and gathers
+results back to request order.  On CPU (tests / this container) the kernel
+runs with interpret=True.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sgmv.ref import sgmv_ref
+from repro.kernels.sgmv.sgmv import sgmv
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("row_block", "scaling",
+                                             "use_kernel"))
+def sgmv_apply(x, a, b, idx, *, row_block: int = 8, scaling: float = 1.0,
+               use_kernel: bool = True):
+    """Unsorted multi-LoRA projection. x: (R, D); idx: (R,) adapter per row;
+    a: (N, D, r); b: (N, r, O). Returns (R, O).
+
+    Layout: rows are sorted by adapter and each adapter's segment is padded
+    up to a multiple of ``row_block``, so every kernel block is adapter-pure.
+    Worst-case padded size R + N*row_block is static (jit-friendly)."""
+    R, D = x.shape
+    N = a.shape[0]
+    if not use_kernel:
+        return sgmv_ref(x, a, b, idx, scaling=scaling)
+
+    counts = jnp.bincount(idx, length=N)                       # (N,)
+    padded = ((counts + row_block - 1) // row_block) * row_block
+    seg_off = jnp.concatenate([jnp.zeros(1, padded.dtype),
+                               jnp.cumsum(padded)[:-1]])        # (N,)
+    seg_start = jnp.concatenate([jnp.zeros(1, counts.dtype),
+                                 jnp.cumsum(counts)[:-1]])      # (N,)
+    order = jnp.argsort(idx)
+    idx_s = jnp.take(idx, order, axis=0)
+    rank = jnp.arange(R) - jnp.take(seg_start, idx_s)           # within segment
+    dest = jnp.take(seg_off, idx_s) + rank                      # padded slot
+
+    # static bound, rounded to a whole number of row blocks
+    S = ((R + row_block - 1) // row_block + N) * row_block
+    buf = jnp.zeros((S, D), x.dtype).at[dest].set(jnp.take(x, order, axis=0))
+    # block g covers rows [g*rb, (g+1)*rb): its adapter from padded offsets
+    bounds = jnp.cumsum(padded)                                 # (N,)
+    block_starts = jnp.arange(S // row_block) * row_block
+    block_adapter = jnp.clip(
+        jnp.searchsorted(bounds, block_starts, side="right"), 0, N - 1)
+
+    y = sgmv(buf, a, b, block_adapter.astype(jnp.int32), row_block=row_block,
+             scaling=scaling, interpret=not _on_tpu())
+
+    out_sorted = jnp.take(y, dest, axis=0)                      # (R, O) sorted
+    inv = jnp.argsort(order)
+    return jnp.take(out_sorted, inv, axis=0)
+
+
+def sgmv_tokens(x, a, b, idx, **kw):
+    """Token-major wrapper: x (B, T, D), idx (B,) → (B, T, O).
+    Every token of a request uses that request's adapter."""
+    B, T, D = x.shape
+    xt = x.reshape(B * T, D)
+    it = jnp.repeat(idx, T)
+    y = sgmv_apply(xt, a, b, it, **kw)
+    return y.reshape(B, T, -1)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the SGMV (segmented-gather LoRA matmul) kernel.
+
+y[i] = scaling * ( x[i] @ A[idx[i]] ) @ B[idx[i]]
+
+x:   (R, D)      rows (flattened requests/tokens)
+A:   (N, D, r)   per-adapter down projections
+B:   (N, r, O)   per-adapter up projections
+idx: (R,)        adapter index per row
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sgmv_ref(x, a, b, idx, *, scaling: float = 1.0):
+    ag = jnp.take(a, idx, axis=0)                       # (R, D, r)
+    bg = jnp.take(b, idx, axis=0)                       # (R, r, O)
+    xa = jnp.einsum("rd,rdk->rk", x.astype(jnp.float32),
+                    ag.astype(jnp.float32))
+    y = jnp.einsum("rk,rko->ro", xa, bg.astype(jnp.float32))
+    return (scaling * y).astype(x.dtype)

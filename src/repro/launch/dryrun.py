@@ -1,0 +1,287 @@
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, and extract roofline inputs from the compiled
+artifact.  No real allocation — inputs are ShapeDtypeStructs.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama2_7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+# The forced 512-device count MUST precede any jax import/init.
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+import argparse     # noqa: E402
+import json         # noqa: E402
+import re           # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+from typing import Dict, Optional  # noqa: E402
+
+import jax          # noqa: E402
+
+from repro.configs import ASSIGNED_ARCHS, ARCH_IDS, get_config  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.sharding import (BASELINE, OPTIMIZED,  # noqa: E402
+                                   ShardingOptions, batch_specs,
+                                   cache_specs, params_specs, to_named)
+from repro.models import moe as moe_mod  # noqa: E402
+from repro.launch.specs import (INPUT_SHAPES, StepSpec,  # noqa: E402
+                                adapt_config, build_step)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "..", "..", "..", "results", "dryrun")
+
+_COLL_RE = re.compile(
+    r"(\w+\[[^\]]*\][^=]*)=\s*\w*\s*(all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)", )
+_SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|pred|f64|s64|c64)"
+                       r"\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "c64": 8}
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum result bytes of every collective op in the partitioned HLO."""
+    out: Dict[str, Dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*((?:\([^)]*\)|\S+))\s+(all-gather|all-reduce|"
+                      r"reduce-scatter|all-to-all|collective-permute)", line)
+        if not m:
+            continue
+        shapes_str, op = m.group(1), m.group(2)
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(shapes_str):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES.get(dt, 4)
+        rec = out.setdefault(op, {"count": 0, "bytes": 0.0})
+        rec["count"] += 1
+        rec["bytes"] += float(nbytes)
+    return out
+
+
+def arg_shardings(step: StepSpec, mesh, cfg, opts: ShardingOptions = BASELINE):
+    """Build NamedShardings for the step's abstract args."""
+    if step.name == "train_step":
+        backbone, adapters, opt_state, batch = step.args
+        sb = params_specs(backbone, mesh, cfg, opts)
+        sa = params_specs(adapters, mesh, cfg, opts)
+        so = type(opt_state)(jax.sharding.PartitionSpec(),
+                             params_specs(opt_state.mu, mesh, cfg, opts),
+                             params_specs(opt_state.nu, mesh, cfg, opts))
+        sbt = batch_specs(batch, mesh)
+        specs = (sb, sa, so, sbt)
+    elif step.name == "prefill_step":
+        params, batch, cache = step.args
+        specs = (params_specs(params, mesh, cfg, opts),
+                 batch_specs(batch, mesh), cache_specs(cache, mesh, cfg, opts))
+    else:  # serve_step
+        params, token, cache, pos = step.args
+        specs = (params_specs(params, mesh, cfg, opts),
+                 batch_specs(token, mesh), cache_specs(cache, mesh, cfg, opts),
+                 jax.sharding.PartitionSpec())
+    return to_named(specs, mesh)
+
+
+def _set_opt_modes(mesh, opts) -> None:
+    """Install/clear the module-level optimization modes (shard_map MoE
+    dispatch, activation-sharding constraint) around a lowering."""
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import batch_axes
+    from repro.models import transformer as tf_mod
+    if mesh is None or opts is None:
+        moe_mod.set_parallel_mesh(None)
+        moe_mod.set_dispatch("ragged")
+        tf_mod.set_activation_spec(None)
+        return
+    moe_mod.set_parallel_mesh(mesh if opts.moe_shard_map else None)
+    moe_mod.set_dispatch(opts.moe_dispatch)
+    # NOTE: an activation-sharding constraint on the scan carry was tried
+    # and REFUTED (added a 1.6 GB gather per layer on mixtral — XLA's carry
+    # fixed point was already optimal); see EXPERIMENTS.md §Perf iter 4.
+    tf_mod.set_activation_spec(None)
+
+
+def _compile_stats(cfg, shape_name: str, mesh,
+                   opts: ShardingOptions = BASELINE) -> Dict:
+    """Compile a (possibly reduced-depth) config and return per-device
+    flops/bytes/collectives."""
+    step = build_step(cfg, shape_name)
+    with mesh:
+        in_sh = arg_shardings(step, mesh, cfg, opts)
+        lowered = jax.jit(step.fn, in_shardings=in_sh,
+                          donate_argnums=step.donate).lower(*step.args)
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    colls = parse_collectives(compiled.as_text())
+    return {"flops": cost.get("flops") or 0.0,
+            "bytes_accessed": cost.get("bytes accessed") or 0.0,
+            "collective_bytes": sum(v["bytes"] for v in colls.values())}
+
+
+def _probe_reports(cfg, shape_name: str, mesh,
+                   opts: ShardingOptions = BASELINE) -> Dict:
+    """XLA counts while(scan) bodies ONCE — measure the per-period layer
+    body (and encoder body for enc-dec) with shallow probes so the roofline
+    can reconstruct true depth:  corrected = full + (P-1)·(f2 - f1).
+    Validated in tests/test_roofline.py."""
+    pat = cfg.pattern
+    base = dict(num_layers=len(pat), layer_pattern=pat)
+    if cfg.encoder_layers:
+        p11 = _compile_stats(cfg.with_(**base, encoder_layers=1),
+                             shape_name, mesh, opts)
+        p21 = _compile_stats(
+            cfg.with_(num_layers=2 * len(pat), layer_pattern=pat * 2,
+                      encoder_layers=1), shape_name, mesh, opts)
+        p12 = _compile_stats(cfg.with_(**base, encoder_layers=2),
+                             shape_name, mesh, opts)
+        return {"d1": p11, "d2": p21, "e2": p12}
+    p1 = _compile_stats(cfg.with_(**base), shape_name, mesh, opts)
+    p2 = _compile_stats(cfg.with_(num_layers=2 * len(pat),
+                                  layer_pattern=pat * 2), shape_name, mesh,
+                        opts)
+    return {"d1": p1, "d2": p2}
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            save: bool = True, probes: bool = True,
+            opts: ShardingOptions = BASELINE,
+            tag: str = "") -> Optional[Dict]:
+    cfg0 = get_config(arch)
+    cfg = adapt_config(cfg0, shape_name)
+    mesh_name = ("pod2x16x16" if multi_pod else "pod16x16") + tag
+    if cfg is None:
+        report = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                  "skipped": ("full-attention enc-dec cannot serve 524288 "
+                              "context (see DESIGN.md §Arch-applicability)")}
+        if save:
+            _save(report)
+        return report
+
+    step = build_step(cfg0, shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    _set_opt_modes(mesh, opts)
+    t0 = time.time()
+    with mesh:
+        in_sh = arg_shardings(step, mesh, cfg, opts)
+        jitted = jax.jit(step.fn, in_shardings=in_sh,
+                         donate_argnums=step.donate)
+        lowered = jitted.lower(*step.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    colls = parse_collectives(compiled.as_text())
+
+    report = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "step": step.name,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        },
+        "cost": {
+            "flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed"),
+            "transcendentals": cost.get("transcendentals"),
+        },
+        "collectives": colls,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "n_devices": int(mesh.size),
+        "num_periods": cfg.num_periods,
+        "pattern": list(cfg.pattern),
+        "n_tail": len(cfg.remainder_layers),
+        "encoder_layers": cfg.encoder_layers,
+        "cfg_meta": {
+            "n_attn_layers": sum(
+                1 for k in (cfg.pattern * cfg.num_periods
+                            + cfg.remainder_layers) if k == "attn"),
+            "num_heads": cfg.num_heads,
+            "head_dim": cfg.head_dim_,
+            "kv_heads": cfg.num_kv_heads,
+            "window": cfg.sliding_window,
+        },
+    }
+    if probes:
+        report["probes"] = _probe_reports(cfg, shape_name, mesh, opts)
+    _set_opt_modes(None, None)
+    if save:
+        _save(report)
+    return report
+
+
+def _save(report: Dict) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    fn = f"{report['arch']}__{report['shape']}__{report['mesh']}.json"
+    with open(os.path.join(RESULTS_DIR, fn), "w") as f:
+        json.dump(report, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="all assigned archs × shapes on the chosen mesh")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="use the OPTIMIZED sharding options (auto TP + "
+                         "shard_map MoE); results saved with '-opt' suffix")
+    ap.add_argument("--no-probes", action="store_true",
+                    help="skip the shallow probe compiles (roofline depth "
+                         "correction) — used for the multi-pod proof pass")
+    args = ap.parse_args()
+
+    archs = ASSIGNED_ARCHS if args.all or not args.arch else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.all or not args.shape \
+        else [args.shape]
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            mesh_name = ("pod2x16x16" if args.multi_pod else "pod16x16") \
+                + ("-opt" if args.optimized else "")
+            out = os.path.join(RESULTS_DIR,
+                               f"{arch}__{shape}__{mesh_name}.json")
+            if args.skip_existing and os.path.exists(out):
+                print(f"[skip] {arch} {shape} {mesh_name} (exists)")
+                continue
+            try:
+                r = run_one(arch, shape, multi_pod=args.multi_pod,
+                            probes=not args.no_probes,
+                            opts=OPTIMIZED if args.optimized else BASELINE,
+                            tag="-opt" if args.optimized else "")
+                if r.get("skipped"):
+                    print(f"[SKIP] {arch:20s} {shape:12s} {r['skipped']}")
+                    continue
+                coll_b = sum(v["bytes"] for v in r["collectives"].values())
+                print(f"[ OK ] {arch:20s} {shape:12s} {mesh_name} "
+                      f"compile={r['compile_s']:7.1f}s "
+                      f"flops={r['cost']['flops'] or 0:.3e} "
+                      f"coll={coll_b:.3e}B "
+                      f"temp={(r['memory']['temp_bytes'] or 0)/2**30:.2f}GiB")
+            except Exception as e:  # noqa: BLE001 — report and continue
+                failures.append((arch, shape, str(e)))
+                print(f"[FAIL] {arch:20s} {shape:12s}: {e}")
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: "
+                         + ", ".join(f"{a}/{s}" for a, s, _ in failures))
+    print("dry-run complete: all combinations lowered and compiled.")
+
+
+if __name__ == "__main__":
+    main()

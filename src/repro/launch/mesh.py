@@ -1,0 +1,38 @@
+"""Production mesh builders.
+
+Functions (not module-level constants) so importing this module never
+touches jax device state.  Production target: TPU v5e, 256 chips per pod
+as a (data=16, model=16) mesh; two pods add a leading "pod" axis.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devs) > n:  # e.g. 512 forced host devices, single-pod mesh
+        arr = np.asarray(devs[:n]).reshape(shape)
+        return jax.sharding.Mesh(arr, axes)
+    raise RuntimeError(
+        f"need {n} devices for mesh {shape}, have {len(devs)} — run under "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=512 (dryrun.py "
+        "sets this automatically)")
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over available devices for tests/examples."""
+    devs = jax.devices()[: data * model]
+    arr = np.asarray(devs).reshape(data, model)
+    return jax.sharding.Mesh(arr, ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    """Axes that shard the batch dimension (pod folds into data-parallel)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,101 @@
+"""Serving launcher: warm multi-LoRA function serving batched requests.
+
+Boots a backbone into the BackboneStore, opens N isolated LoRA function
+handles, and serves a request stream through the adaptive batching
+scheduler with REAL prefill/decode execution.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2_5_3b --requests 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, get_smoke
+from repro.core.engine import InferenceEngine
+from repro.core.lora import partition_lora
+from repro.core.sharing import BackboneStore, FunctionInstance
+from repro.models import transformer as tf
+from repro.serverless.batching import (BatchProfile, BatchingScheduler,
+                                       Request)
+from repro.serverless.latency import LatencyModel, SLICE_HW
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama2_7b", choices=ARCH_IDS)
+    ap.add_argument("--adapters", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--rate", type=float, default=50.0, help="req/s")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full else get_smoke(args.arch)
+    if cfg.family in ("audio",):
+        raise SystemExit("serve launcher demo supports decoder-only archs")
+    key = jax.random.PRNGKey(0)
+
+    # one shared backbone, N isolated functions (paper §4.4)
+    params = tf.init_params(key, cfg, lora_adapters=args.adapters)
+    store = BackboneStore()
+    store.register(cfg.name, cfg, params)
+    _, bank = partition_lora(params)
+    fns = [FunctionInstance(f"fn{i}", store.open(cfg.name), bank, i)
+           for i in range(args.adapters)]
+    print(f"backbone {cfg.name}: {store.nbytes(cfg.name) / 2 ** 20:.1f} MiB "
+          f"shared by {store.refcount(cfg.name)} functions (zero-copy)")
+
+    engine = InferenceEngine(
+        cfg, params, max_context=args.prompt_len + args.max_new + 8)
+
+    # profile → adaptive batching (Eq. 2/3 with roofline-derived T0/α)
+    lat = LatencyModel(SLICE_HW)
+    t0, alpha = lat.prefill_t0_alpha(cfg, args.prompt_len)
+    sched = BatchingScheduler(adaptive=True)
+    sched.rate_hint = lambda fn: args.rate / args.adapters
+    for f in fns:
+        sched.register(f.fn_id, BatchProfile(t0, alpha, max_batch=8))
+
+    rng = np.random.default_rng(0)
+    now, served, gen_tokens = 0.0, 0, 0
+    pending = args.requests
+    wall0 = time.perf_counter()
+    i = 0
+    while served < args.requests:
+        if pending > 0:
+            sched.push(Request(i, f"fn{rng.integers(args.adapters)}", now,
+                               args.prompt_len, args.max_new, 2.5))
+            pending -= 1
+            i += 1
+            now += float(rng.exponential(1.0 / args.rate))
+        for q in sched.ready_queues(now):
+            batch = q.pop_batch()
+            if not batch:
+                continue
+            b = len(batch)
+            a = jnp.full((b,), int(q.fn_id[2:]), jnp.int32)
+            prompts = jax.random.randint(
+                jax.random.PRNGKey(served), (b, args.prompt_len), 0,
+                cfg.vocab_size)
+            out, _ = engine.generate(prompts, args.max_new, adapter_idx=a)
+            served += b
+            gen_tokens += int(out.size)
+            print(f"t={now:6.3f}s  {q.fn_id} batch={b} -> {out.shape}")
+        nt = sched.next_timer(now)
+        if nt is not None and nt > now and pending == 0:
+            now = nt
+    wall = time.perf_counter() - wall0
+    print(f"\nserved {served} requests, {gen_tokens} tokens in {wall:.2f}s "
+          f"({gen_tokens / wall:.0f} tok/s on {jax.default_backend()})")
+    for f in fns:
+        f.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,235 @@
+"""Divisibility-aware sharding policy for params, caches, and batches.
+
+Strategy (baseline — §Perf iterates on this):
+  * 2-D weight sharding (FSDP × TP): the output/feature dim of every large
+    matrix shards over "model"; the input dim shards over the data axes
+    ("pod","data" flattened) — so large backbones (340B) fit per-chip HBM
+    on both meshes.  pjit inserts the all-gathers.
+  * Activations/batch shard over the data axes.
+  * KV caches: batch over data axes; kv-heads over "model" when divisible,
+    else head_dim, else replicated.
+  * Scan-stacked leading dims (layer periods, adapter banks) never shard.
+  * Anything small (norms, biases, LoRA) replicates.
+
+Every rule checks divisibility before applying — configs with awkward
+head counts (15 heads, 8 kv-heads on a 16-way axis) degrade gracefully.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+from repro.models.config import ModelConfig
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingOptions:
+    """Perf-iteration knobs (§Perf in EXPERIMENTS.md).
+
+    weight_mode:
+      "fsdp2d" — baseline: row dim over data axes, col dim over model
+                 (fits any size; pays weight all-gathers per layer step).
+      "tp"     — tensor-parallel only: col over model, rows replicated
+                 (no weight collectives; needs params/model_axis ≤ budget).
+      "auto"   — "tp" when the weights fit per-chip under tp_budget, else
+                 "fsdp2d" (the optimized production default).
+    """
+    weight_mode: str = "fsdp2d"
+    tp_budget_bytes: int = 10 * 2 ** 30   # leave room for cache/activations
+    moe_shard_map: bool = False           # local token routing (see moe.py)
+    # KV-cache fallback when kv_heads don't divide the model axis:
+    #   "hd"  — shard head_dim (baseline; makes QK^T a cross-chip reduction
+    #           of (B,H,S) scores — measured to dominate decode collectives)
+    #   "seq" — shard the sequence dim (distributed flash-softmax: only
+    #           (B,H,hd) partial numerators cross chips)
+    kv_fallback: str = "hd"
+    moe_dispatch: str = "ragged"   # "ragged" | "capacity" (see moe.py)
+    # Megatron-style row-parallel down-projections (attn out / MLP down /
+    # recurrent out): residual stays replicated in D; one output psum
+    # replaces per-layer activation all-gathers.
+    row_parallel_down: bool = False
+
+
+BASELINE = ShardingOptions()
+OPTIMIZED = ShardingOptions(weight_mode="auto", moe_shard_map=True,
+                            kv_fallback="seq", moe_dispatch="capacity",
+                            row_parallel_down=True)
+
+
+def resolve_weight_mode(cfg: ModelConfig, mesh: Mesh,
+                        opts: ShardingOptions) -> str:
+    if opts.weight_mode != "auto":
+        return opts.weight_mode
+    per_chip = 2 * cfg.param_count() / mesh.shape["model"]
+    return "tp" if per_chip <= opts.tp_budget_bytes else "fsdp2d"
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    return dim % _axis_size(mesh, axes) == 0
+
+
+def spec_for_leaf(path: Tuple[str, ...], shape: Tuple[int, ...],
+                  mesh: Mesh, cfg: ModelConfig,
+                  weight_mode: str = "fsdp2d",
+                  row_parallel_down: bool = False) -> P:
+    """PartitionSpec for one parameter leaf, identified by its tree path."""
+    name = path[-1] if path else ""
+    in_lora = "lora" in path
+    da = batch_axes(mesh)
+
+    # down-projections (attn out, MLP down, recurrent/SSM out) contract a
+    # model-sharded feature dim → row-parallel over "model" (Megatron
+    # style): the residual stream stays replicated in D and the layer pays
+    # one output psum instead of pre-matmul activation all-gathers.
+    down_proj = (row_parallel_down and len(path) >= 2 and path[-1] == "w"
+                 and path[-2] in ("wo", "out", "out_proj"))
+
+    # stacked leading dims: layer periods ("periods" subtree) and adapter
+    # banks (multi-LoRA) stay unsharded; we shard the trailing matrix dims.
+    def matrix_spec(nd: int, d_in: int, d_out: int) -> P:
+        lead = [None] * (nd - 2)
+        # never shard both tiny dims; replicate small matrices (< 1 MiB/shard)
+        if d_in * d_out < (1 << 20):
+            return P(*([None] * nd))
+        if down_proj and _fits(d_in, mesh, "model"):
+            # col stays replicated: sharding d_out over the data axes would
+            # put "data" on two dims of the output (batch is already there),
+            # which GSPMD resolves by full rematerialization
+            return P(*lead, "model", None)
+        col = "model" if _fits(d_out, mesh, "model") else None
+        row = None
+        if weight_mode == "fsdp2d" and _fits(d_in, mesh, da):
+            row = da
+        return P(*lead, row, col)
+
+    if in_lora:
+        return P(*([None] * len(shape)))   # adapters are small — replicate
+    if name in ("scale", "bias", "b", "a_log", "dt_bias", "d_skip", "lam"):
+        return P(*([None] * len(shape)))
+    if name == "embed" or (path and path[-1] == "lm_head"):
+        # (V, D): vocab over data axes (fsdp2d), d_model over model
+        V, D = shape[-2], shape[-1]
+        v_ax = da if (weight_mode == "fsdp2d" and _fits(V, mesh, da)) \
+            else None
+        return P(*([None] * (len(shape) - 2)), v_ax,
+                 "model" if _fits(D, mesh, "model") else None)
+    if name == "conv":
+        return P(*([None] * len(shape)))
+    if name in ("wi", "wg", "wo") and len(shape) == 3 and "moe" in path:
+        # MoE experts (E, D, F): experts over model when divisible, else
+        # feature dim over model (+ D over data in fsdp2d mode)
+        E, D, F = shape
+        d_ax = da if (weight_mode == "fsdp2d" and _fits(D, mesh, da)) \
+            else None
+        if _fits(E, mesh, "model"):
+            return P("model", d_ax, None)
+        return P(None, d_ax, "model" if _fits(F, mesh, "model") else None)
+    if name == "w" and len(shape) >= 2:
+        return matrix_spec(len(shape), shape[-2], shape[-1])
+    if len(shape) >= 2:
+        return matrix_spec(len(shape), shape[-2], shape[-1])
+    return P(*([None] * len(shape)))
+
+
+def params_specs(abstract_params, mesh: Mesh, cfg: ModelConfig,
+                 opts: ShardingOptions = BASELINE):
+    """PartitionSpec pytree matching an abstract (eval_shape) param tree."""
+    mode = resolve_weight_mode(cfg, mesh, opts)
+
+    def walk(tree, path):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        if isinstance(tree, (tuple, list)):
+            return tuple(walk(v, path + (f"#{i}",))
+                         for i, v in enumerate(tree))
+        if tree is None:
+            return None
+        return spec_for_leaf(path, tree.shape, mesh, cfg, weight_mode=mode,
+                             row_parallel_down=opts.row_parallel_down)
+
+    return walk(abstract_params, ())
+
+
+def cache_specs(abstract_cache, mesh: Mesh, cfg: ModelConfig,
+                opts: ShardingOptions = BASELINE):
+    """Specs for the decode-state cache pytree."""
+    da = batch_axes(mesh)
+
+    def leaf_spec(path, shape) -> P:
+        name = path[-1]
+        if name in ("k", "v", "xk", "xv"):
+            # (P?, B, S, K, hd) — batch over data; heads over model when
+            # divisible, else seq or head_dim per opts.kv_fallback
+            nd = len(shape)
+            B, S, K, hd = shape[-4], shape[-3], shape[-2], shape[-1]
+            b_ax = da if _fits(B, mesh, da) else None
+            if _fits(K, mesh, "model"):
+                return P(*([None] * (nd - 4)), b_ax, None, "model", None)
+            if opts.kv_fallback == "seq" and _fits(S, mesh, "model"):
+                return P(*([None] * (nd - 4)), b_ax, "model", None, None)
+            if _fits(hd, mesh, "model"):
+                return P(*([None] * (nd - 4)), b_ax, None, None, "model")
+            return P(*([None] * (nd - 4)), b_ax, None, None, None)
+        if name == "ssm":
+            # (P?, B, nh, hd, S)
+            nd = len(shape)
+            B, nh = shape[-4], shape[-3]
+            b_ax = da if _fits(B, mesh, da) else None
+            h_ax = "model" if _fits(nh, mesh, "model") else None
+            return P(*([None] * (nd - 4)), b_ax, h_ax, None, None)
+        if name == "conv":
+            nd = len(shape)
+            B, Di = shape[-3], shape[-1]
+            b_ax = da if _fits(B, mesh, da) else None
+            return P(*([None] * (nd - 3)), b_ax, None,
+                     "model" if _fits(Di, mesh, "model") else None)
+        if name == "h":
+            nd = len(shape)
+            B, Di = shape[-2], shape[-1]
+            b_ax = da if _fits(B, mesh, da) else None
+            return P(*([None] * (nd - 2)), b_ax,
+                     "model" if _fits(Di, mesh, "model") else None)
+        return P(*([None] * len(shape)))
+
+    def walk(tree, path):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        if isinstance(tree, (tuple, list)):
+            return tuple(walk(v, path + (f"#{i}",))
+                         for i, v in enumerate(tree))
+        if tree is None:
+            return None
+        return leaf_spec(path, tree.shape)
+
+    return walk(abstract_cache, ())
+
+
+def batch_specs(abstract_batch, mesh: Mesh):
+    """Tokens/labels/embeds: batch dim over the data axes."""
+    da = batch_axes(mesh)
+
+    def leaf(x) -> P:
+        if x.ndim == 0:
+            return P()
+        b_ax = da if _fits(x.shape[0], mesh, da) else None
+        return P(b_ax, *([None] * (x.ndim - 1)))
+
+    return jax.tree_util.tree_map(leaf, abstract_batch)
+
+
+def to_named(spec_tree, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: None if s is None else NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P) or x is None)

@@ -1,0 +1,137 @@
+"""Abstract input specs (ShapeDtypeStruct — no allocation) for every
+(architecture × input shape), plus per-shape step builders.
+
+The four assigned input shapes lower different steps:
+  train_4k    → LoRA train_step       (B=256, T=4096)
+  prefill_32k → prefill_step          (B=32,  T=32768)
+  decode_32k  → serve_step, 1 token   (B=128, KV len 32768)
+  long_500k   → serve_step, 1 token   (B=1,   context 524288; sub-quadratic
+                archs only — dense archs run their sliding-window variant)
+
+Modality frontends are STUBS per assignment: whisper gets (B, 1500, D)
+frame embeddings, paligemma gets (B, 256, D) patch embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lora import partition_lora
+from repro.models import transformer as tf
+from repro.models.cache import effective_cache_len
+from repro.models.config import ModelConfig
+from repro.training.adamw import AdamW, AdamWState, constant_schedule
+from repro.training.train import make_lora_train_step
+
+INPUT_SHAPES: Dict[str, Dict[str, int]] = {
+    "train_4k": dict(seq_len=4096, global_batch=256),
+    "prefill_32k": dict(seq_len=32768, global_batch=32),
+    "decode_32k": dict(seq_len=32768, global_batch=128),
+    "long_500k": dict(seq_len=524288, global_batch=1),
+}
+
+
+def adapt_config(cfg: ModelConfig, shape_name: str) -> Optional[ModelConfig]:
+    """Shape-specific config adaptation; None → combination is skipped.
+
+    long_500k requires sub-quadratic decode: SSM/hybrid run natively,
+    SWA archs (mixtral) natively, dense archs run the documented
+    sliding-window variant; whisper (full-attention enc-dec) skips."""
+    if shape_name != "long_500k":
+        return cfg
+    if cfg.family == "audio":
+        return None                      # skip — recorded in DESIGN.md
+    if cfg.is_subquadratic:
+        return cfg
+    return cfg.with_(sliding_window=cfg.long_context_window)
+
+
+def abstract_params(cfg: ModelConfig, lora_adapters: Optional[int] = None):
+    return jax.eval_shape(
+        lambda k: tf.init_params(k, cfg, lora_adapters=lora_adapters),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_inputs(cfg: ModelConfig, B: int, T: int) -> Dict[str, Any]:
+    """Training/prefill batch spec with stub modality embeddings."""
+    extra: Dict[str, Any] = {}
+    t_text = T
+    if cfg.family == "vlm":
+        t_text = max(T - cfg.num_image_tokens, 16)
+        extra["embeds"] = _sds((B, cfg.num_image_tokens, cfg.d_model),
+                               cfg.dtype)
+    if cfg.family == "audio":
+        extra["frame_embeds"] = _sds((B, cfg.encoder_seq, cfg.d_model),
+                                     cfg.dtype)
+    return {"tokens": _sds((B, t_text), jnp.int32), **extra}
+
+
+def abstract_cache(cfg: ModelConfig, B: int, context: int):
+    return jax.eval_shape(
+        lambda: tf.init_cache(cfg, B, context))
+
+
+@dataclasses.dataclass
+class StepSpec:
+    """A lowered unit: callable + abstract args (kw-ordered tuple)."""
+    name: str
+    fn: Callable
+    args: Tuple[Any, ...]
+    donate: Tuple[int, ...] = ()
+
+
+def build_step(cfg: ModelConfig, shape_name: str) -> Optional[StepSpec]:
+    sh = INPUT_SHAPES[shape_name]
+    B, T = sh["global_batch"], sh["seq_len"]
+    cfg = adapt_config(cfg, shape_name)
+    if cfg is None:
+        return None
+
+    if shape_name == "train_4k":
+        params = abstract_params(cfg)
+        backbone, adapters = jax.eval_shape(
+            lambda p: partition_lora(p), params)
+        opt = AdamW(lr=constant_schedule(1e-4))
+        opt_state = jax.eval_shape(lambda a: opt.init(a), adapters)
+        batch = batch_inputs(cfg, B, T)
+        labels_like = batch["tokens"]
+        batch = dict(batch, labels=_sds(labels_like.shape, jnp.int32))
+        step = make_lora_train_step(cfg, opt, remat=True)
+        return StepSpec("train_step", step,
+                        (backbone, adapters, opt_state, batch))
+
+    if shape_name == "prefill_32k":
+        params = abstract_params(cfg)
+        context = effective_cache_len(cfg, T)
+        cache = abstract_cache(cfg, B, context)
+        batch = batch_inputs(cfg, B, T)
+
+        def prefill_step(params, batch, cache):
+            logits, new_cache, _ = tf.forward(
+                params, cfg, batch["tokens"], cache=cache,
+                embeds=batch.get("embeds"),
+                frame_embeds=batch.get("frame_embeds"), last_only=True)
+            return logits[:, -1], new_cache
+
+        return StepSpec("prefill_step", prefill_step,
+                        (params, batch, cache), donate=(2,))
+
+    # decode shapes: ONE new token against a seq_len-deep context
+    params = abstract_params(cfg)
+    context = effective_cache_len(cfg, T)
+    cache = abstract_cache(cfg, B, context)
+    token = _sds((B,), jnp.int32)
+    pos = _sds((), jnp.int32)
+
+    def serve_step(params, token, cache, pos):
+        return tf.decode_step(params, cfg, token, cache, pos)
+
+    return StepSpec("serve_step", serve_step, (params, token, cache, pos),
+                    donate=(2,))

@@ -1,0 +1,86 @@
+"""Decode-state caches for all mixer kinds.
+
+Attention: ring-buffer KV cache (physical length = min(context, window) for
+sliding-window archs — the memory win that makes long_500k decodable).
+REC (RG-LRU): conv tail + hidden state.  SSD (Mamba-2): conv tail + SSM state.
+Cross-attention: static encoder K/V computed once at prefill.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.models.config import ATTN, REC, SSD, ModelConfig
+
+Cache = Dict[str, Any]
+
+
+def attn_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> Cache:
+    K, hd = cfg.num_kv_heads, cfg.head_dim_
+    return {
+        "k": jnp.zeros((batch, cache_len, K, hd), dtype),
+        "v": jnp.zeros((batch, cache_len, K, hd), dtype),
+        "slot_pos": jnp.full((cache_len,), -1, jnp.int32),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def rec_cache(cfg: ModelConfig, batch: int, dtype) -> Cache:
+    Di, W = cfg.d_inner, cfg.ssm_conv_width
+    return {"conv": jnp.zeros((batch, W - 1, Di), dtype),
+            "h": jnp.zeros((batch, Di), jnp.float32)}
+
+
+def ssd_cache(cfg: ModelConfig, batch: int, dtype) -> Cache:
+    Di, W = cfg.d_inner, cfg.ssm_conv_width
+    nh, hd, S = cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state_dim
+    return {"conv": jnp.zeros((batch, W - 1, Di), dtype),
+            "ssm": jnp.zeros((batch, nh, hd, S), jnp.float32)}
+
+
+def layer_cache(kind: str, cfg: ModelConfig, batch: int, cache_len: int,
+                dtype, *, cross: bool = False) -> Cache:
+    if kind == ATTN:
+        c = attn_cache(cfg, batch, cache_len, dtype)
+        if cross:
+            K, hd = cfg.num_kv_heads, cfg.head_dim_
+            c["xk"] = jnp.zeros((batch, cfg.encoder_seq, K, hd), dtype)
+            c["xv"] = jnp.zeros((batch, cfg.encoder_seq, K, hd), dtype)
+        return c
+    if kind == REC:
+        return rec_cache(cfg, batch, dtype)
+    if kind == SSD:
+        return ssd_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def effective_cache_len(cfg: ModelConfig, context_len: int) -> int:
+    """Physical KV length: ring buffer bounded by the sliding window."""
+    if cfg.sliding_window is not None:
+        return min(context_len, cfg.sliding_window)
+    return context_len
+
+
+def _stack(trees):
+    import jax
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_cache(cfg: ModelConfig, batch: int, context_len: int,
+               dtype: Optional[Any] = None) -> Cache:
+    """Full model cache pytree: stacked per pattern position over periods,
+    plus unrolled tail layers."""
+    dtype = dtype or cfg.jnp_dtype
+    clen = effective_cache_len(cfg, context_len)
+    pat = cfg.pattern
+    periods = {}
+    for j, kind in enumerate(pat):
+        per = [layer_cache(kind, cfg, batch, clen, dtype,
+                           cross=cfg.cross_attention)
+               for _ in range(cfg.num_periods)]
+        periods[f"p{j}"] = _stack(per)
+    tail = tuple(layer_cache(kind, cfg, batch, clen, dtype,
+                             cross=cfg.cross_attention)
+                 for kind in cfg.remainder_layers)
+    return {"periods": periods, "tail": tail}

@@ -1,0 +1,191 @@
+"""Model configuration for all supported architecture families.
+
+One frozen dataclass covers the six families (dense / moe / ssm / hybrid /
+audio enc-dec / vlm).  A layer is described by a (mixer, mlp) pair; the
+repeating heterogeneous block is ``layer_pattern`` (period 1 for homogeneous
+stacks, e.g. ("rec","rec","attn") for recurrentgemma).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+# Mixer kinds
+ATTN = "attn"          # GQA attention (optional sliding window / bias)
+REC = "rec"            # RG-LRU recurrent block (griffin/recurrentgemma)
+SSD = "ssd"            # Mamba-2 state-space duality block (attention-free)
+
+# MLP kinds
+SWIGLU = "swiglu"
+SQRELU = "squared_relu"
+GELU = "gelu"
+MOE = "moe"
+NONE = "none"          # SSD blocks carry their own in/out projections
+
+
+@dataclasses.dataclass(frozen=True)
+class LoRAConfig:
+    """Low-rank adapter attached to backbone projections."""
+    rank: int = 16
+    alpha: float = 32.0
+    targets: Tuple[str, ...] = ("q", "k", "v", "o")
+    # number of distinct adapters served by a multi-LoRA engine
+    num_adapters: int = 1
+
+    @property
+    def scaling(self) -> float:
+        return self.alpha / self.rank
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    head_dim: Optional[int] = None   # default d_model // num_heads
+    mlp_type: str = SWIGLU
+    qkv_bias: bool = False
+    norm_type: str = "rmsnorm"       # rmsnorm | layernorm
+    tie_embeddings: bool = True
+    rope_theta: float = 10_000.0
+
+    # attention variants
+    sliding_window: Optional[int] = None   # native SWA (mixtral, local attn)
+    # SWA window used only for the long-context decode variant of dense archs
+    long_context_window: int = 4096
+
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+
+    # SSM (mamba2 / SSD)
+    ssm_state_dim: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 64
+    ssm_conv_width: int = 4
+
+    # hybrid: repeating (mixer) pattern; empty => homogeneous from family
+    layer_pattern: Tuple[str, ...] = ()
+
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    encoder_seq: int = 0             # precomputed frame embeddings length
+    cross_attention: bool = False
+
+    # vlm
+    num_image_tokens: int = 0        # prefix image-patch embeddings (stub)
+
+    dtype: str = "bfloat16"
+    lora: LoRAConfig = dataclasses.field(default_factory=LoRAConfig)
+
+    # citation for the assigned config (paper / model card)
+    source: str = ""
+
+    # ---- derived ----
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.num_heads
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def pattern(self) -> Tuple[str, ...]:
+        if self.layer_pattern:
+            return self.layer_pattern
+        if self.family == "ssm":
+            return (SSD,)
+        return (ATTN,)
+
+    @property
+    def mlp_for(self) -> str:
+        if self.family == "moe":
+            return MOE
+        if self.family == "ssm":
+            return NONE
+        return self.mlp_type
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_num_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def num_periods(self) -> int:
+        return self.num_layers // len(self.pattern)
+
+    @property
+    def remainder_layers(self) -> Tuple[str, ...]:
+        p = self.pattern
+        return p[: self.num_layers - self.num_periods * len(p)]
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True if decode memory/compute does not grow with full context."""
+        return self.family in ("ssm", "hybrid") or self.sliding_window is not None
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # parameter count of the backbone (for artifact sizes / roofline)
+    def param_count(self) -> int:
+        D, F, V = self.d_model, self.d_ff, self.vocab_size
+        H, K, hd = self.num_heads, self.num_kv_heads, self.head_dim_
+        attn = D * H * hd + 2 * D * K * hd + H * hd * D
+        if self.qkv_bias:
+            attn += (H + 2 * K) * hd
+        if self.mlp_for == MOE:
+            mlp = self.num_experts * (2 * D * F + F * D) + D * self.num_experts
+        elif self.mlp_for == SWIGLU:
+            mlp = 3 * D * F
+        elif self.mlp_for == NONE:
+            mlp = 0
+        else:
+            mlp = 2 * D * F
+        rec = 0
+        if REC in self.pattern:
+            Di = self.d_inner
+            rec = 2 * D * Di + 2 * Di + Di * D + 2 * Di  # in/gate proj, rglru params, out
+        ssd = 0
+        if SSD in self.pattern:
+            Di, S, nh = self.d_inner, self.ssm_state_dim, self.ssm_num_heads
+            ssd = D * (2 * Di + 2 * S + nh) + Di * D + nh * 2 + Di
+        per = {ATTN: attn + mlp, REC: rec + mlp, SSD: ssd}
+        n_per_kind = {}
+        for k in self.pattern:
+            n_per_kind[k] = n_per_kind.get(k, 0) + 1
+        total = 0
+        for k, n in n_per_kind.items():
+            total += per[k] * (n * self.num_periods)
+        for k in self.remainder_layers:
+            total += per[k]
+        total += V * D  # embeddings
+        if not self.tie_embeddings:
+            total += V * D
+        total += D  # final norm
+        if self.encoder_layers:
+            total += self.encoder_layers * (attn + 2 * D * F)  # encoder (gelu mlp)
+            if self.cross_attention:
+                total += self.num_layers * attn  # decoder cross-attention
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed experts)."""
+        if self.mlp_for != MOE:
+            return self.param_count()
+        D, F = self.d_model, self.d_ff
+        dead = (self.num_experts - self.experts_per_token) * 3 * D * F
+        return int(self.param_count() - dead * self.num_layers)

@@ -1,0 +1,330 @@
+"""Core neural layers: norms, RoPE, GQA attention, MLP variants.
+
+All layers are pure functions over parameter pytrees (init_* / apply_*).
+LoRA is threaded through every projection via :func:`dense` — unmerged
+application (backbone matmul and low-rank matmul computed separately and
+summed), which is the paper's C1 requirement for backbone sharing.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import GELU, MOE, NONE, SQRELU, SWIGLU, ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ----------------------------------------------------------------- init utils
+def _normal(key, shape, dtype, scale):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, *, bias: bool = False) -> Params:
+    p = {"w": _normal(key, (d_in, d_out), dtype, 1.0 / math.sqrt(d_in))}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+# ------------------------------------------------------------------- dense/LoRA
+def dense(x, p: Params, lora: Optional[Params] = None, *, scaling: float = 1.0,
+          adapter_idx=None):
+    """y = x @ W (+ b) (+ scaling * (x @ A) @ B)   — unmerged LoRA path.
+
+    ``lora`` holds {"a": (D, r), "b": (r, O)} for a single adapter, or
+    {"a": (N, D, r), "b": (N, r, O)} with ``adapter_idx`` (B,) for a
+    multi-LoRA batch (per-request adapter selection, SGMV semantics).
+    """
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    if lora is not None:
+        a, b = lora["a"], lora["b"]
+        if adapter_idx is None:
+            y = y + scaling * ((x @ a) @ b)
+        else:
+            # gather-based reference SGMV: x (B, T, D), idx (B,)
+            ag = jnp.take(a, adapter_idx, axis=0)          # (B, D, r)
+            bg = jnp.take(b, adapter_idx, axis=0)          # (B, r, O)
+            y = y + scaling * jnp.einsum(
+                "btr,bro->bto", jnp.einsum("btd,bdr->btr", x, ag), bg
+            ).astype(y.dtype)
+    return y
+
+
+def lora_init(key, d_in: int, d_out: int, rank: int, dtype,
+              num_adapters: Optional[int] = None) -> Params:
+    """A ~ N(0, 1/d_in), B = 0 (standard LoRA init)."""
+    sh_a = (d_in, rank) if num_adapters is None else (num_adapters, d_in, rank)
+    sh_b = (rank, d_out) if num_adapters is None else (num_adapters, rank, d_out)
+    return {
+        "a": _normal(key, sh_a, dtype, 1.0 / math.sqrt(d_in)),
+        "b": jnp.zeros(sh_b, dtype),
+    }
+
+
+# ----------------------------------------------------------------------- norms
+def norm_init(d: int, kind: str, dtype) -> Params:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(x, p: Params, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"].astype(jnp.float32)
+                + p["bias"].astype(jnp.float32)).astype(x.dtype)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ------------------------------------------------------------------------ RoPE
+def rope(x, positions, theta: float):
+    """x: (..., T, H, hd); positions: (..., T) or (T,)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., T, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- attention
+def attn_init(key, cfg: ModelConfig, dtype, *, cross: bool = False,
+              lora_adapters: Optional[int] = None) -> Params:
+    D, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 8)
+    p: Params = {
+        "wq": dense_init(ks[0], D, H * hd, dtype, bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], D, K * hd, dtype, bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], D, K * hd, dtype, bias=cfg.qkv_bias),
+        "wo": dense_init(ks[3], H * hd, D, dtype),
+    }
+    if cfg.lora and not cross:
+        r, n = cfg.lora.rank, lora_adapters
+        lk = jax.random.split(ks[4], 4)
+        tmap = {"q": (D, H * hd, lk[0]), "k": (D, K * hd, lk[1]),
+                "v": (D, K * hd, lk[2]), "o": (H * hd, D, lk[3])}
+        p["lora"] = {
+            t: lora_init(tmap[t][2], tmap[t][0], tmap[t][1], r, dtype, n)
+            for t in cfg.lora.targets if t in tmap
+        }
+    return p
+
+
+def _scores_mask(q_pos, k_pos, kind: str, window: Optional[int],
+                 prefix_len: int = 0):
+    """Build additive mask (..., Tq, Tk) from absolute positions."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    if kind == "bidir":
+        ok = kp >= 0
+    elif kind == "prefix":
+        ok = (kp <= qp) | (kp < prefix_len)
+    else:  # causal
+        ok = kp <= qp
+    ok = ok & (kp >= 0)
+    if window is not None:
+        ok = ok & (kp > qp - window)
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def attention_core(q, k, v, mask):
+    """Dense reference attention. q: (B,Tq,H,hd), k/v: (B,Tk,K,hd)."""
+    B, Tq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qh = q.reshape(B, Tq, K, G, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qh.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    scores = scores + mask[:, None, None, :, :]
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    return out.reshape(B, Tq, H, hd).astype(q.dtype)
+
+
+def attention_chunked(q, k, v, q_pos, k_pos, *, kind: str = "causal",
+                      window: Optional[int] = None, prefix_len: int = 0,
+                      q_chunk: int = 1024, kv_chunk: int = 1024):
+    """Flash-style online-softmax attention in pure jnp (lax.scan over
+    q-chunks and kv-chunks) — O(chunk^2) temporaries, TPU-lowerable.
+
+    Functionally identical to attention_core; used for long sequences and
+    as the structure the Pallas kernel mirrors.
+    """
+    B, Tq, H, hd = q.shape
+    Tk = k.shape[1]
+    Kh = k.shape[2]
+    G = H // Kh
+    q_chunk = min(q_chunk, Tq)
+    kv_chunk = min(kv_chunk, Tk)
+    nq, nk = -(-Tq // q_chunk), -(-Tk // kv_chunk)
+    pad_q, pad_k = nq * q_chunk - Tq, nk * kv_chunk - Tk
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    qpos = jnp.pad(q_pos, ((0, 0), (0, pad_q)) if q_pos.ndim == 2 else (0, pad_q),
+                   constant_values=-(10 ** 9))
+    kp_ = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp_ = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    kpos = jnp.pad(k_pos, ((0, 0), (0, pad_k)) if k_pos.ndim == 2 else (0, pad_k),
+                   constant_values=-1)
+    if qpos.ndim == 1:
+        qpos = jnp.broadcast_to(qpos[None], (B, qpos.shape[0]))
+    if kpos.ndim == 1:
+        kpos = jnp.broadcast_to(kpos[None], (B, kpos.shape[0]))
+
+    qc = qp.reshape(B, nq, q_chunk, Kh, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    qposc = qpos.reshape(B, nq, q_chunk).transpose(1, 0, 2)
+    kc = kp_.reshape(B, nk, kv_chunk, Kh, hd).transpose(1, 0, 2, 3, 4)
+    vc = vp_.reshape(B, nk, kv_chunk, Kh, hd).transpose(1, 0, 2, 3, 4)
+    kposc = kpos.reshape(B, nk, kv_chunk).transpose(1, 0, 2)
+    sm = 1.0 / math.sqrt(hd)
+
+    def q_step(_, qi):
+        qb, qpb = qi  # (B, qc, K, G, hd), (B, qc)
+        acc0 = jnp.zeros((B, q_chunk, Kh, G, hd), jnp.float32)
+        m0 = jnp.full((B, q_chunk, Kh, G), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, q_chunk, Kh, G), jnp.float32)
+
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            kb, vb, kpb = ki
+            s = jnp.einsum("bqkgh,bskh->bqkgs", qb.astype(jnp.float32),
+                           kb.astype(jnp.float32)) * sm
+            msk = _scores_mask(qpb, kpb, kind, window, prefix_len)
+            s = s + msk[:, :, None, None, :]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bqkgs,bskh->bqkgh", p, vb.astype(jnp.float32))
+            return (acc, m_new, l), None
+
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), (kc, vc, kposc))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (qc, qposc))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * q_chunk, H, hd)
+    return out[:, :Tq]
+
+
+def apply_attention(p: Params, cfg: ModelConfig, x, *, positions,
+                    cache: Optional[Params] = None, kv_x=None,
+                    mask_kind: str = "causal", prefix_len: int = 0,
+                    window: Optional[int] = None, adapter_idx=None,
+                    use_chunked: bool = False, use_rope: bool = True):
+    """GQA attention with optional KV cache (decode) and cross-attention.
+
+    x: (B, T, D). positions: (T,) or (B, T) absolute positions of x tokens.
+    cache: {"k","v": (B, S, K, hd), "slot_pos": (S,) int32, "idx": ()} — decode
+    writes one token at rolling slot idx % S and attends over the cache.
+    kv_x: encoder output for cross-attention (keys/values from it, no cache).
+    Returns (out, new_cache).
+    """
+    B, T, D = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    lora = p.get("lora", {})
+    s = cfg.lora.scaling if cfg.lora else 1.0
+
+    q = dense(x, p["wq"], lora.get("q"), scaling=s, adapter_idx=adapter_idx)
+    src = kv_x if kv_x is not None else x
+    k = dense(src, p["wk"], lora.get("k") if kv_x is None else None,
+              scaling=s, adapter_idx=adapter_idx if kv_x is None else None)
+    v = dense(src, p["wv"], lora.get("v") if kv_x is None else None,
+              scaling=s, adapter_idx=adapter_idx if kv_x is None else None)
+    q = q.reshape(B, T, H, hd)
+    k = k.reshape(B, -1, K, hd)
+    v = v.reshape(B, -1, K, hd)
+
+    if positions.ndim == 1:
+        positions = jnp.broadcast_to(positions[None], (B, T))
+    if use_rope and kv_x is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = cache
+    if cache is not None and kv_x is None:
+        # Ring-buffer write of T tokens at slot = idx % S.  Engine guarantees
+        # slot + T <= S (prefill writes at idx=0 with T <= S; decode T=1).
+        S = cache["k"].shape[1]
+        slot = cache["idx"] % S
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, slot, 0, 0))
+        spos = jax.lax.dynamic_update_slice(
+            cache["slot_pos"], positions[0].astype(jnp.int32), (slot,))
+        new_cache = dict(cache)
+        new_cache.update(
+            {"k": ck, "v": cv, "slot_pos": spos, "idx": cache["idx"] + T})
+        k, v = ck, cv
+        k_pos = jnp.broadcast_to(spos[None], (B, S))
+    elif kv_x is not None:
+        k_pos = jnp.broadcast_to(jnp.arange(k.shape[1])[None], (B, k.shape[1]))
+        mask_kind = "bidir"
+    else:
+        k_pos = positions
+
+    if use_chunked:
+        out = attention_chunked(q, k, v, positions, k_pos, kind=mask_kind,
+                                window=window, prefix_len=prefix_len)
+    else:
+        mask = _scores_mask(positions, k_pos, mask_kind, window, prefix_len)
+        out = attention_core(q, k, v, mask)
+
+    out = out.reshape(B, T, H * hd)
+    out = dense(out, p["wo"], lora.get("o"), scaling=s, adapter_idx=adapter_idx)
+    return out, new_cache
+
+
+# ------------------------------------------------------------------------ MLPs
+def mlp_init(key, cfg: ModelConfig, dtype) -> Params:
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    kind = cfg.mlp_for
+    if kind == SWIGLU:
+        return {"wi": dense_init(ks[0], D, F, dtype),
+                "wg": dense_init(ks[1], D, F, dtype),
+                "wo": dense_init(ks[2], F, D, dtype)}
+    if kind in (SQRELU, GELU):
+        return {"wi": dense_init(ks[0], D, F, dtype),
+                "wo": dense_init(ks[2], F, D, dtype)}
+    raise ValueError(kind)
+
+
+def apply_mlp(p: Params, cfg: ModelConfig, x):
+    kind = cfg.mlp_for if cfg.mlp_for != MOE else SWIGLU
+    if kind == SWIGLU:
+        h = jax.nn.silu(x @ p["wg"]["w"]) * (x @ p["wi"]["w"])
+    elif kind == SQRELU:
+        h = jnp.square(jax.nn.relu(x @ p["wi"]["w"]))
+    elif kind == GELU:
+        h = jax.nn.gelu(x @ p["wi"]["w"])
+    else:
+        raise ValueError(kind)
+    return h @ p["wo"]["w"]
+
+
+def encoder_mlp_init(key, d_model: int, d_ff: int, dtype) -> Params:
+    ks = jax.random.split(key, 2)
+    return {"wi": dense_init(ks[0], d_model, d_ff, dtype),
+            "wo": dense_init(ks[1], d_ff, d_model, dtype)}
+
+
+def apply_encoder_mlp(p: Params, x):
+    return jax.nn.gelu(x @ p["wi"]["w"]) @ p["wo"]["w"]

@@ -1,0 +1,197 @@
+"""Mamba-2 SSD (state-space duality) block — attention-free mixer.
+
+Prefill/train use the chunked SSD algorithm (quadratic intra-chunk term +
+linear inter-chunk recurrence, scan over chunks).  Decode is the O(1)
+diagonal recurrence  h_t = exp(a·dt)·h_{t-1} + dt·(B_t ⊗ x_t),
+y_t = C_t·h_t + D·x_t.   [arXiv:2405.21060]
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _normal, apply_norm, norm_init
+
+Params = Dict[str, Any]
+
+
+def ssd_init(key, cfg: ModelConfig, dtype) -> Params:
+    D, Di, S, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state_dim, cfg.ssm_num_heads
+    W = cfg.ssm_conv_width
+    ks = jax.random.split(key, 6)
+    scale = 1.0 / math.sqrt(D)
+    return {
+        # fused input projection -> [z | x | B | C | dt]
+        "in_proj": {"w": _normal(ks[0], (D, 2 * Di + 2 * S + nh), dtype, scale)},
+        "conv": _normal(ks[1], (W, Di), dtype, 0.5),   # depthwise causal conv on x
+        "a_log": jnp.log(jnp.linspace(1.0, float(nh), nh)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "gate_norm": norm_init(Di, "rmsnorm", dtype),
+        "out_proj": {"w": _normal(ks[2], (Di, D), dtype, 1.0 / math.sqrt(Di))},
+    }
+
+
+def _split(p: Params, cfg: ModelConfig, x):
+    Di, S, nh = cfg.d_inner, cfg.ssm_state_dim, cfg.ssm_num_heads
+    zxbcdt = x @ p["in_proj"]["w"]
+    z, xs, B, C, dt = jnp.split(
+        zxbcdt, [Di, 2 * Di, 2 * Di + S, 2 * Di + 2 * S], axis=-1)
+    return z, xs, B, C, dt
+
+
+def _causal_conv(xs, w, state=None):
+    """Depthwise causal conv. xs: (B, T, Di); w: (W, Di).
+    state: (B, W-1, Di) previous inputs (decode). Returns (out, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(xs.shape[:1] + (W - 1,) + xs.shape[2:], xs.dtype)
+    else:
+        pad = state
+    xfull = jnp.concatenate([pad, xs], axis=1)          # (B, T+W-1, Di)
+    out = sum(xfull[:, i:i + xs.shape[1]] * w[i] for i in range(W))
+    new_state = xfull[:, -(W - 1):]
+    return out, new_state
+
+
+def _segsum(dtA):
+    """dtA: (..., Q). Returns L (..., Q, Q): exp(sum_{j<k<=i} dtA_k), i>=j."""
+    Q = dtA.shape[-1]
+    cs = jnp.cumsum(dtA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]           # (..., i, j)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(xh, dt, a, B, C, chunk: int,
+                h0: Optional[jnp.ndarray] = None):
+    """Chunked SSD scan.
+
+    xh: (b, T, nh, hd);  dt: (b, T, nh) (already softplus'd, >0)
+    a:  (nh,) negative;  B, C: (b, T, S)
+    Returns (y: (b, T, nh, hd), h_final: (b, nh, hd, S)).
+    """
+    b, T, nh, hd = xh.shape
+    S = B.shape[-1]
+    Q = min(chunk, T)
+    T0 = T
+    pad = (-T) % Q
+    if pad:
+        # zero-pad the tail: dt=0 ⇒ decay 1 and no state contribution, so
+        # padded steps are identities for the carried state
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        T = T + pad
+    nc = T // Q
+    xc = xh.reshape(b, nc, Q, nh, hd)
+    dtc = dt.reshape(b, nc, Q, nh)
+    Bc = B.reshape(b, nc, Q, S)
+    Cc = C.reshape(b, nc, Q, S)
+
+    dtA = dtc * a[None, None, None, :]                   # (b, nc, Q, nh) — log decay
+    L = _segsum(dtA.transpose(0, 1, 3, 2))               # (b, nc, nh, Q, Q)
+
+    # intra-chunk (quadratic) term: Y[i] = sum_{j<=i} L[i,j] (C_i.B_j) dt_j x_j
+    CB = jnp.einsum("bnis,bnjs->bnij", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))              # (b, nc, Q, Q)
+    M = CB[:, :, None] * L                               # (b, nc, nh, Q, Q)
+    y_intra = jnp.einsum("bnhij,bnjh,bnjhd->bnihd", M,
+                         dtc.astype(jnp.float32),
+                         xc.astype(jnp.float32))
+
+    # chunk summaries: S_n = sum_j exp(cs_Q - cs_j) dt_j B_j ⊗ x_j
+    cs = jnp.cumsum(dtA, axis=2)                         # (b, nc, Q, nh)
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)        # (b, nc, Q, nh)
+    states = jnp.einsum("bnqh,bnqh,bnqs,bnqhd->bnhds",
+                        decay_to_end, dtc.astype(jnp.float32),
+                        Bc.astype(jnp.float32), xc.astype(jnp.float32))
+    chunk_decay = jnp.exp(cs[:, :, -1, :])               # (b, nc, nh)
+
+    # inter-chunk recurrence over chunk states
+    def step(h, inp):
+        st, dec = inp                                    # (b,nh,hd,S), (b,nh)
+        h_out = h                                        # state BEFORE this chunk
+        h = h * dec[..., None, None] + st
+        return h, h_out
+
+    hinit = jnp.zeros((b, nh, hd, S), jnp.float32) if h0 is None else h0
+    h_final, h_prev = jax.lax.scan(
+        step, hinit, (states.transpose(1, 0, 2, 3, 4),
+                      chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)             # (b, nc, nh, hd, S)
+
+    # inter-chunk term: Y[i] += exp(cs_i) * C_i · h_prev
+    in_decay = jnp.exp(cs)                               # (b, nc, Q, nh)
+    y_inter = jnp.einsum("bnqs,bnhds,bnqh->bnqhd",
+                         Cc.astype(jnp.float32), h_prev, in_decay)
+
+    y = (y_intra + y_inter).reshape(b, T, nh, hd)
+    return y[:, :T0], h_final
+
+
+def apply_ssd(p: Params, cfg: ModelConfig, x, *,
+              state: Optional[Params] = None,
+              lora: Optional[Params] = None, lora_scaling: float = 1.0,
+              adapter_idx=None) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """Full Mamba-2 block. x: (B, T, D).
+
+    state (decode): {"conv": (B, W-1, Di), "ssm": (B, nh, hd, S)}.
+    Returns (out, new_state)."""
+    Bsz, T, D = x.shape
+    Di, S, nh, hd = cfg.d_inner, cfg.ssm_state_dim, cfg.ssm_num_heads, cfg.ssm_head_dim
+    z, xs, Bm, Cm, dt = _split(p, cfg, x)
+    if lora is not None and "in" in lora:
+        a, bmat = lora["in"]["a"], lora["in"]["b"]
+        if adapter_idx is None:
+            extra = lora_scaling * ((x @ a) @ bmat)
+        else:
+            ag = jnp.take(a, adapter_idx, axis=0)
+            bg = jnp.take(bmat, adapter_idx, axis=0)
+            extra = lora_scaling * jnp.einsum(
+                "btr,bro->bto", jnp.einsum("btd,bdr->btr", x, ag), bg)
+        ez, exs, eB, eC, edt = jnp.split(
+            extra, [Di, 2 * Di, 2 * Di + S, 2 * Di + 2 * S], axis=-1)
+        z, xs, Bm, Cm, dt = z + ez, xs + exs, Bm + eB, Cm + eC, dt + edt
+
+    conv_state = state["conv"] if state is not None else None
+    xs, new_conv = _causal_conv(xs, p["conv"], conv_state)
+    xs = jax.nn.silu(xs)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B, T, nh)
+    a = -jnp.exp(p["a_log"])                                      # (nh,) < 0
+    xh = xs.reshape(Bsz, T, nh, hd)
+
+    if state is None:
+        y, h_final = ssd_chunked(xh, dt, a, Bm, Cm, cfg.ssm_chunk)
+    else:
+        # O(1) decode recurrence (T == 1)
+        h = state["ssm"]                                          # (B, nh, hd, S)
+        dA = jnp.exp(dt[:, 0] * a[None, :])                       # (B, nh)
+        dBx = jnp.einsum("bh,bs,bhd->bhds", dt[:, 0],
+                         Bm[:, 0].astype(jnp.float32),
+                         xh[:, 0].astype(jnp.float32))
+        h_final = h * dA[..., None, None] + dBx
+        y = jnp.einsum("bhds,bs->bhd", h_final,
+                       Cm[:, 0].astype(jnp.float32))[:, None]     # (B,1,nh,hd)
+
+    y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, T, Di).astype(x.dtype)
+    y = apply_norm(y * jax.nn.silu(z), p["gate_norm"], "rmsnorm")
+    out = y @ p["out_proj"]["w"]
+    if lora is not None and "out" in lora:
+        a2, b2 = lora["out"]["a"], lora["out"]["b"]
+        if adapter_idx is None:
+            out = out + lora_scaling * ((y @ a2) @ b2)
+        else:
+            ag = jnp.take(a2, adapter_idx, axis=0)
+            bg = jnp.take(b2, adapter_idx, axis=0)
+            out = out + lora_scaling * jnp.einsum(
+                "btr,bro->bto", jnp.einsum("btd,bdr->btr", y, ag), bg)
+    return out, {"conv": new_conv, "ssm": h_final}

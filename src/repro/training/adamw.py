@@ -1,0 +1,85 @@
+"""AdamW optimizer + LR schedules, pure JAX (no optax dependency).
+
+State and update are pytree-structured so they compose with pjit sharding
+(optimizer state inherits the parameter sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jnp.ndarray], jnp.ndarray]
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jax.tree_util.tree_map(
+            lambda x: None if x is None
+            else jnp.zeros_like(x, dtype=jnp.float32), p,
+            is_leaf=lambda x: x is None)
+        return AdamWState(jnp.zeros((), jnp.int32), zeros(params),
+                          zeros(params))
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        lr = self.lr(step)
+        b1, b2 = self.b1, self.b2
+
+        class _Upd:
+            """Sentinel node so tuple-valued pytrees (e.g. the layer "tail")
+            are never mistaken for update triples."""
+            __slots__ = ("p", "m", "v")
+
+            def __init__(self, p, m, v):
+                self.p, self.m, self.v = p, m, v
+
+        def upd(g, m, v, p):
+            if g is None or p is None:
+                return _Upd(None, None, None)
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * (g32 * g32)
+            mhat = m / (1 - b1 ** step.astype(jnp.float32))
+            vhat = v / (1 - b2 ** step.astype(jnp.float32))
+            delta = mhat / (jnp.sqrt(vhat) + self.eps) \
+                + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return _Upd(new_p, m, v)
+
+        is_none = lambda x: x is None
+        flat = jax.tree_util.tree_map(
+            upd, grads, state.mu, state.nu, params, is_leaf=is_none)
+        is_upd = lambda x: isinstance(x, _Upd)
+        new_p = jax.tree_util.tree_map(lambda t: t.p, flat, is_leaf=is_upd)
+        new_m = jax.tree_util.tree_map(lambda t: t.m, flat, is_leaf=is_upd)
+        new_v = jax.tree_util.tree_map(lambda t: t.v, flat, is_leaf=is_upd)
+        return new_p, AdamWState(step, new_m, new_v)
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def constant_schedule(lr_val: float) -> Callable:
+    return lambda step: jnp.asarray(lr_val, jnp.float32)

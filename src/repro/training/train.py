@@ -1,0 +1,113 @@
+"""Training steps: LoRA fine-tuning (frozen shared backbone — the paper's
+setting) and full-model training for small architectures.
+
+``make_lora_train_step`` differentiates ONLY the adapter leaves: the
+backbone is closed over as a frozen constant, so optimizer state is
+O(adapter) — this is what makes fine-tuning the 340B nemotron config
+feasible on the production mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lora import combine_lora, partition_lora
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+from repro.training.adamw import AdamW, AdamWState
+
+Params = Dict[str, Any]
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean next-token cross-entropy. logits (B,T,V); labels (B,T)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -jnp.mean(ll)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict, *,
+            aux_weight: float = 0.01, remat: bool = True):
+    logits, _, aux = tf.forward(
+        params, cfg, batch["tokens"],
+        embeds=batch.get("embeds"), frame_embeds=batch.get("frame_embeds"),
+        remat=remat)
+    loss = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return loss + aux_weight * aux, {"ce": loss, "aux": aux}
+
+
+def make_lora_train_step(cfg: ModelConfig, opt: AdamW, *, remat: bool = True):
+    """Returns train_step((backbone, adapters, opt_state), batch) — grads on
+    adapters only."""
+
+    def train_step(backbone: Params, adapters: Params, opt_state: AdamWState,
+                   batch: Dict):
+        def loss_of(ad):
+            return loss_fn(combine_lora(backbone, ad), cfg, batch,
+                           remat=remat)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_of, has_aux=True)(adapters)
+        new_ad, new_opt = opt.update(grads, opt_state, adapters)
+        metrics = dict(metrics, loss=loss,
+                       grad_norm=_global_norm(grads))
+        return new_ad, new_opt, metrics
+
+    return train_step
+
+
+def make_full_train_step(cfg: ModelConfig, opt: AdamW, *, remat: bool = True):
+    def train_step(params: Params, opt_state: AdamWState, batch: Dict):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, remat=remat),
+            has_aux=True)(params)
+        new_p, new_opt = opt.update(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss, grad_norm=_global_norm(grads))
+        return new_p, new_opt, metrics
+
+    return train_step
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    leaves = [x for x in jax.tree_util.tree_leaves(tree) if x is not None]
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def train_loop(cfg: ModelConfig, params: Params, data_iter, *,
+               steps: int, opt: Optional[AdamW] = None,
+               lora_only: bool = True, log_every: int = 10,
+               log_fn=print):
+    """Simple single-host training driver used by the examples."""
+    from repro.training.adamw import cosine_schedule
+    opt = opt or AdamW(lr=cosine_schedule(3e-4, min(20, steps // 10 + 1),
+                                          steps))
+    history = []
+    if lora_only:
+        backbone, adapters = partition_lora(params)
+        opt_state = opt.init(adapters)
+        step_fn = jax.jit(make_lora_train_step(cfg, opt))
+        for i in range(steps):
+            batch = next(data_iter)
+            adapters, opt_state, m = step_fn(backbone, adapters, opt_state,
+                                             batch)
+            history.append(float(m["loss"]))
+            if i % log_every == 0:
+                log_fn(f"step {i:5d} loss {float(m['loss']):.4f} "
+                       f"gnorm {float(m['grad_norm']):.3f}")
+        return combine_lora(backbone, adapters), history
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_full_train_step(cfg, opt))
+    for i in range(steps):
+        batch = next(data_iter)
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        history.append(float(m["loss"]))
+        if i % log_every == 0:
+            log_fn(f"step {i:5d} loss {float(m['loss']):.4f} "
+                   f"gnorm {float(m['grad_norm']):.3f}")
+    return params, history

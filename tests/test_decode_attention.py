@@ -1,0 +1,91 @@
+"""Decode GQA attention kernel vs oracle: ring-cache validity, sliding
+window, partial fill, dtype sweep — interpret=True on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.decode_attention.ops import decode_gqa
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def _mk(B, H, K, S, hd, seed, dtype=jnp.float32, fill=None):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, K, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, K, hd), jnp.float32).astype(dtype)
+    n = fill if fill is not None else S
+    slot_pos = jnp.where(jnp.arange(S) < n, jnp.arange(S), -1).astype(
+        jnp.int32)
+    return q, k, v, slot_pos
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,K,S,hd,win,sb", [
+    (2, 4, 2, 64, 16, None, 16),
+    (1, 8, 2, 128, 32, 32, 32),
+    (2, 6, 2, 96, 16, None, 32),      # S pads to block multiple
+    (1, 4, 4, 64, 64, 16, 64),        # MHA (G=1)
+])
+def test_decode_attention_matches_oracle(B, H, K, S, hd, win, sb, dtype):
+    q, k, v, slot_pos = _mk(B, H, K, S, hd, seed=B + S, dtype=dtype)
+    pos = jnp.array(S - 1, jnp.int32)
+    ref = decode_attention_ref(q, k, v, slot_pos, pos, window=win)
+    out = decode_gqa(q, k, v, slot_pos, pos, window=win, s_block=sb)
+    tol = 3e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_partially_filled_ring_cache():
+    """Empty slots (slot_pos = -1) must not contribute."""
+    q, k, v, slot_pos = _mk(1, 4, 2, 64, 16, seed=7, fill=20)
+    pos = jnp.array(19, jnp.int32)
+    ref = decode_attention_ref(q, k, v, slot_pos, pos)
+    out = decode_gqa(q, k, v, slot_pos, pos, s_block=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-5, rtol=3e-5)
+    # oracle sanity: result identical if garbage beyond fill changes
+    k2 = k.at[:, 20:].set(99.0)
+    ref2 = decode_attention_ref(q, k2, v, slot_pos, pos)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(ref2),
+                               atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(S=st.sampled_from([32, 48, 64]), K=st.sampled_from([1, 2]),
+       G=st.sampled_from([1, 2, 3]), win=st.sampled_from([None, 16]),
+       seed=st.integers(0, 2 ** 16))
+def test_decode_attention_property(S, K, G, win, seed):
+    H, hd = K * G, 16
+    q, k, v, slot_pos = _mk(1, H, K, S, hd, seed=seed)
+    pos = jnp.array(S - 1, jnp.int32)
+    out = decode_gqa(q, k, v, slot_pos, pos, window=win, s_block=16)
+    ref = decode_attention_ref(q, k, v, slot_pos, pos, window=win)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_matches_model_cache_semantics():
+    """Kernel semantics == the model's dense decode path on a real cache."""
+    from repro.models.config import ModelConfig
+    from repro.models import transformer as tf
+    cfg = ModelConfig(name="d", family="dense", num_layers=1, d_model=32,
+                      num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64)
+    p = tf.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, 64)
+    cache = tf.init_cache(cfg, 1, 16)
+    _, cache, _ = tf.forward(p, cfg, toks, cache=cache)
+    lc = cache["periods"]["p0"]
+    k = lc["k"][0]         # strip period dim -> (B, S, K, hd)
+    v = lc["v"][0]
+    spos = lc["slot_pos"][0]
+    # a fresh query against the filled cache
+    q = jax.random.normal(jax.random.PRNGKey(2), (1, 4, 8))
+    pos = jnp.array(8, jnp.int32)
+    out = decode_gqa(q, k, v, spos, pos, s_block=16)
+    ref = decode_attention_ref(q, k, v, spos, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=5e-3, rtol=5e-3)   # bf16 cache

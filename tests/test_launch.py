@@ -1,0 +1,134 @@
+"""Launch-layer unit tests: input-shape → step mapping, config adaptation
+rules, optimized sharding options, mesh helpers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.launch.sharding import (BASELINE, OPTIMIZED, ShardingOptions,
+                                   params_specs, resolve_weight_mode,
+                                   spec_for_leaf)
+from repro.launch.specs import (INPUT_SHAPES, abstract_params, adapt_config,
+                                batch_inputs, build_step)
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+        self.size = int(np.prod(list(shape.values())))
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+
+
+def test_input_shapes_exactly_assigned():
+    assert INPUT_SHAPES["train_4k"] == dict(seq_len=4096, global_batch=256)
+    assert INPUT_SHAPES["prefill_32k"] == dict(seq_len=32768, global_batch=32)
+    assert INPUT_SHAPES["decode_32k"] == dict(seq_len=32768, global_batch=128)
+    assert INPUT_SHAPES["long_500k"] == dict(seq_len=524288, global_batch=1)
+
+
+def test_adapt_config_rules():
+    # whisper skips long_500k
+    assert adapt_config(get_config("whisper_medium"), "long_500k") is None
+    # dense archs get the SWA variant for long_500k
+    c = adapt_config(get_config("phi3_medium_14b"), "long_500k")
+    assert c.sliding_window == c.long_context_window
+    # sub-quadratic archs unchanged
+    c = adapt_config(get_config("mamba2_780m"), "long_500k")
+    assert c.sliding_window is None
+    c = adapt_config(get_config("mixtral_8x22b"), "long_500k")
+    assert c.sliding_window == 4096
+    # non-long shapes never adapted
+    for s in ("train_4k", "prefill_32k", "decode_32k"):
+        assert adapt_config(get_config("phi3_medium_14b"), s).sliding_window \
+            is None
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_build_step_kinds(arch):
+    assert build_step(get_config(arch), "train_4k").name == "train_step"
+    assert build_step(get_config(arch), "prefill_32k").name == "prefill_step"
+    assert build_step(get_config(arch), "decode_32k").name == "serve_step"
+
+
+def test_decode_step_has_single_token_inputs():
+    step = build_step(get_config("qwen2_5_3b"), "decode_32k")
+    params, token, cache, pos = step.args
+    assert token.shape == (128,)
+    assert pos.shape == ()
+
+
+def test_swa_cache_is_window_bounded():
+    step = build_step(get_config("mixtral_8x22b"), "long_500k")
+    _, _, cache, _ = step.args
+    k = cache["periods"]["p0"]["k"]
+    assert k.shape[2] == 4096, "ring cache must be window-sized, not 524288"
+
+
+def test_vlm_and_audio_stub_inputs():
+    b = batch_inputs(get_config("paligemma_3b"), 32, 4096)
+    assert b["embeds"].shape == (32, 256, 2048)
+    assert b["tokens"].shape == (32, 4096 - 256)
+    b = batch_inputs(get_config("whisper_medium"), 32, 4096)
+    assert b["frame_embeds"].shape == (32, 1500, 1024)
+
+
+# ------------------------------------------------------ sharding options
+def test_resolve_weight_mode_auto():
+    assert resolve_weight_mode(get_config("phi3_medium_14b"), MESH,
+                               OPTIMIZED) == "tp"
+    assert resolve_weight_mode(get_config("nemotron_4_340b"), MESH,
+                               OPTIMIZED) == "fsdp2d"
+    assert resolve_weight_mode(get_config("phi3_medium_14b"), MESH,
+                               BASELINE) == "fsdp2d"
+
+
+def test_tp_mode_never_shards_rows_over_data():
+    cfg = get_config("phi3_medium_14b")
+    ap = abstract_params(cfg)
+    specs = params_specs(ap, MESH, cfg, OPTIMIZED)
+    def walk(t):
+        if isinstance(t, dict):
+            for v in t.values():
+                walk(v)
+        elif isinstance(t, (tuple, list)):
+            for v in t:
+                walk(v)
+        elif t is not None:
+            for ax in tuple(t):
+                assert ax != ("data",) and ax != "data", t
+    walk(specs)
+
+
+def test_row_parallel_down_projection_spec():
+    cfg = get_config("phi3_medium_14b")
+    s = spec_for_leaf(("periods", "p0", "attn", "wo", "w"), (2, 5120, 5120),
+                      MESH, cfg, weight_mode="tp", row_parallel_down=True)
+    assert tuple(s) == (None, "model", None)
+    s = spec_for_leaf(("periods", "p0", "attn", "wq", "w"), (2, 5120, 5120),
+                      MESH, cfg, weight_mode="tp", row_parallel_down=True)
+    assert tuple(s)[-1] == "model" and tuple(s)[-2] is None
+
+
+def test_kv_seq_fallback():
+    from repro.launch.sharding import cache_specs
+    from repro.launch.specs import abstract_cache
+    cfg = get_config("phi3_medium_14b")      # kv=10 doesn't divide 16
+    cache = abstract_cache(cfg, 128, 32768)
+    base = cache_specs(cache, MESH, cfg, BASELINE)
+    opt = cache_specs(cache, MESH, cfg, OPTIMIZED)
+    kb = tuple(base["periods"]["p0"]["k"])
+    ko = tuple(opt["periods"]["p0"]["k"])
+    assert kb[-1] == "model" and kb[-3] is None     # baseline: head_dim
+    assert ko[-3] == "model" and ko[-1] is None     # optimized: sequence
+
+
+def test_mesh_helpers():
+    from repro.launch.mesh import batch_axes, make_debug_mesh
+    m = make_debug_mesh(1, 1)
+    assert batch_axes(m) == ("data",)
+    assert m.shape["model"] == 1

@@ -1,0 +1,36 @@
+"""Loading path: pipelined upload fidelity + overlap-estimate algebra."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import transformer as tf
+from repro.serverless.latency import DEFAULT_HW
+from repro.serverless.loading import estimate_load_seconds, pipelined_device_put
+
+
+def test_pipelined_device_put_roundtrip():
+    cfg = get_smoke("llama2_7b")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    loaded, secs = pipelined_device_put(params)
+    assert secs >= 0.0
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_overlap_estimate_bounds():
+    n = 14 * 2 ** 30
+    h2d = estimate_load_seconds(n, DEFAULT_HW, from_remote=False)
+    full = estimate_load_seconds(n, DEFAULT_HW, from_remote=True,
+                                 overlap=0.0)
+    piped = estimate_load_seconds(n, DEFAULT_HW, from_remote=True,
+                                  overlap=1.0)
+    some = estimate_load_seconds(n, DEFAULT_HW, from_remote=True,
+                                 overlap=0.85)
+    remote = n / DEFAULT_HW.remote_bw
+    assert h2d == pytest.approx(n / DEFAULT_HW.h2d_bw)
+    assert piped == pytest.approx(max(remote, h2d))       # perfect overlap
+    assert full == pytest.approx(remote + h2d)            # no overlap
+    assert piped <= some <= full

@@ -1,0 +1,126 @@
+"""Sharding-policy invariants (divisibility, replication of small leaves)
+and roofline bookkeeping (collective parsing, scan-depth correction)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.sharding import (_axis_size, batch_specs, cache_specs,
+                                   params_specs, spec_for_leaf)
+from repro.launch.specs import (INPUT_SHAPES, abstract_cache,
+                                abstract_params, adapt_config, batch_inputs)
+
+
+class FakeMesh:
+    """Shape-only stand-in (no devices needed for spec construction)."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+        self.size = int(np.prod(list(shape.values())))
+
+
+MESH1 = FakeMesh({"data": 16, "model": 16})
+MESH2 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _check_divisible(spec_tree, abstract_tree, mesh):
+    flat_s = jax.tree_util.tree_leaves(
+        spec_tree, is_leaf=lambda x: isinstance(x, P) or x is None)
+    flat_a = jax.tree_util.tree_leaves(abstract_tree)
+    assert len(flat_s) == len(flat_a)
+    for spec, arr in zip(flat_s, flat_a):
+        if spec is None:
+            continue
+        for dim, axes in zip(arr.shape, tuple(spec)):
+            if axes is None:
+                continue
+            assert dim % _axis_size(mesh, axes) == 0, (arr.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS[:10])
+@pytest.mark.parametrize("mesh", [MESH1, MESH2], ids=["16x16", "2x16x16"])
+def test_param_specs_always_divisible(arch, mesh):
+    cfg = get_config(arch)
+    ap = abstract_params(cfg)
+    specs = params_specs(ap, mesh, cfg)
+    _check_divisible(specs, ap, mesh)
+
+
+@pytest.mark.parametrize("arch", ["llama2_7b", "mixtral_8x22b",
+                                  "mamba2_780m", "recurrentgemma_9b"])
+@pytest.mark.parametrize("shape", list(INPUT_SHAPES))
+def test_cache_and_batch_specs_divisible(arch, shape):
+    cfg = adapt_config(get_config(arch), shape)
+    if cfg is None:
+        pytest.skip("combination skipped by design")
+    sh = INPUT_SHAPES[shape]
+    from repro.models.cache import effective_cache_len
+    cache = abstract_cache(cfg, sh["global_batch"],
+                           effective_cache_len(cfg, sh["seq_len"]))
+    specs = cache_specs(cache, MESH1, cfg)
+    _check_divisible(specs, cache, MESH1)
+    batch = batch_inputs(cfg, sh["global_batch"], min(sh["seq_len"], 4096))
+    bs = batch_specs(batch, MESH1)
+    _check_divisible(bs, batch, MESH1)
+
+
+def test_small_leaves_replicated():
+    spec = spec_for_leaf(("final_norm", "scale"), (4096,), MESH1,
+                         get_config("llama2_7b"))
+    assert spec == P(None)
+    spec = spec_for_leaf(("periods", "p0", "attn", "lora", "q", "a"),
+                         (2, 4096, 16), MESH1, get_config("llama2_7b"))
+    assert all(s is None for s in tuple(spec))
+
+
+@settings(max_examples=30, deadline=None)
+@given(d_in=st.sampled_from([960, 2048, 4096, 5120, 18432, 1536]),
+       d_out=st.sampled_from([2560, 11008, 16384, 73728, 100352]))
+def test_weight_spec_property(d_in, d_out):
+    cfg = get_config("llama2_7b")
+    spec = spec_for_leaf(("layers", "mlp", "wi", "w"), (d_in, d_out), MESH1,
+                         cfg)
+    row, col = tuple(spec)[-2], tuple(spec)[-1]
+    if row is not None:
+        assert d_in % _axis_size(MESH1, row) == 0
+    if col is not None:
+        assert d_out % _axis_size(MESH1, col) == 0
+
+
+# ------------------------------------------------------- roofline plumbing
+def test_parse_collectives():
+    from repro.launch.dryrun import parse_collectives
+    hlo = """
+  %ag = bf16[8,512,128]{2,1,0} all-gather(%x), replica_groups={}
+  %ar.1 = f32[1024]{0} all-reduce(%y), to_apply=%sum
+  %t = (bf16[4,4]{1,0}, bf16[4,4]{1,0}) all-to-all(%a, %b)
+  %not_a_coll = f32[2] add(%p, %q)
+"""
+    out = parse_collectives(hlo)
+    assert out["all-gather"]["count"] == 1
+    assert out["all-gather"]["bytes"] == 8 * 512 * 128 * 2
+    assert out["all-reduce"]["bytes"] == 1024 * 4
+    assert out["all-to-all"]["bytes"] == 2 * 16 * 2
+    assert "add" not in str(out)
+
+
+def test_scan_depth_correction():
+    from benchmarks.roofline import corrected_stats
+    report = {
+        "cost": {"flops": 100.0, "bytes_accessed": 50.0},
+        "collectives": {"all-reduce": {"count": 1, "bytes": 8.0}},
+        "num_periods": 10,
+        "probes": {"d1": {"flops": 20.0, "bytes_accessed": 10.0,
+                          "collective_bytes": 2.0},
+                   "d2": {"flops": 28.0, "bytes_accessed": 14.0,
+                          "collective_bytes": 2.5}},
+        "shape": "decode_32k", "n_devices": 256,
+    }
+    out = corrected_stats(report)
+    # body = 8 flops; corrected = 100 + 9*8 = 172
+    assert out["flops"] == pytest.approx(172.0)
+    assert out["bytes_accessed"] == pytest.approx(50.0 + 9 * 4.0)
+    assert out["collective_bytes"] == pytest.approx(8.0 + 9 * 0.5)

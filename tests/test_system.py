@@ -1,0 +1,106 @@
+"""End-to-end behaviour tests: the simulator reproduces the paper's
+qualitative claims, and the real-JAX serving path works under the
+scheduler's decisions."""
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke
+from repro.core.engine import InferenceEngine
+from repro.models import transformer as tf
+from repro.serverless import baselines as B
+from repro.serverless.cluster import Cluster
+from repro.serverless.latency import SLICE_HW
+from repro.serverless.simulator import FunctionDef, Simulator
+from repro.serverless.traces import TraceSpec, make_workload
+
+
+@pytest.fixture(scope="module")
+def paper_setup():
+    l7 = get_config("llama2_7b")
+    l13 = get_config("llama2_13b")
+    fns = ([FunctionDef(f"fn7-{i}", "llama2-7b", l7) for i in range(4)] +
+           [FunctionDef(f"fn13-{i}", "llama2-13b", l13) for i in range(4)])
+    specs = ([TraceSpec(f"fn7-{i}", "bursty", 0.02, 1200.0, 512, 48, 2.5)
+              for i in range(4)] +
+             [TraceSpec(f"fn13-{i}", "bursty", 0.012, 1200.0, 512, 48, 4.0)
+              for i in range(4)])
+    wl = make_workload(specs, seed=1)
+    results = {}
+    for pol in (B.SERVERLESS_LORA, B.SERVERLESS_LLM, B.INSTAINFER,
+                B.VLLM, B.DLORA, B.variant_nbs(), B.variant_npl()):
+        cl = Cluster(1, 4, 2, SLICE_HW.hbm_bytes, SLICE_HW.host_mem_bytes)
+        results[pol.name] = Simulator(fns, pol, cluster=cl).run(
+            copy.deepcopy(wl))
+    return results
+
+
+def test_all_requests_served(paper_setup):
+    for name, res in paper_setup.items():
+        unserved = [r for r in res.requests if r.first_token < 0]
+        assert not unserved, f"{name}: {len(unserved)} unserved"
+
+
+def test_ttft_beats_serverless_baselines(paper_setup):
+    """Paper Fig. 6: large TTFT reduction vs ServerlessLLM / InstaInfer."""
+    ours = paper_setup["ServerlessLoRA"].mean_ttft
+    assert ours < 0.7 * paper_setup["ServerlessLLM"].mean_ttft
+    assert ours < 0.6 * paper_setup["InstaInfer"].mean_ttft
+
+
+def test_cost_beats_baselines(paper_setup):
+    """Paper Table 1: large monetary-cost reduction."""
+    ours = paper_setup["ServerlessLoRA"].dollars
+    assert ours < paper_setup["ServerlessLLM"].dollars
+    assert ours < paper_setup["InstaInfer"].dollars
+    assert ours < 0.5 * paper_setup["vLLM"].dollars
+
+
+def test_cost_effectiveness_best_overall(paper_setup):
+    """Paper Fig. 9: CE above every baseline."""
+    ours = paper_setup["ServerlessLoRA"].cost_effectiveness
+    for other in ("ServerlessLLM", "InstaInfer", "vLLM", "dLoRA"):
+        assert ours > paper_setup[other].cost_effectiveness, other
+
+
+def test_ablations_degrade(paper_setup):
+    """Paper Table 3: removing sharing or pre-loading hurts."""
+    full = paper_setup["ServerlessLoRA"]
+    nbs = paper_setup["ServerlessLoRA-NBS"]
+    npl = paper_setup["ServerlessLoRA-NPL"]
+    assert nbs.dollars > 1.2 * full.dollars, "sharing saves cost"
+    assert npl.mean_ttft > 1.5 * full.mean_ttft, "pre-loading saves TTFT"
+    assert full.cost_effectiveness >= max(nbs.cost_effectiveness,
+                                          npl.cost_effectiveness)
+
+
+def test_serverful_has_zero_cold_start(paper_setup):
+    for name in ("vLLM", "dLoRA"):
+        assert paper_setup[name].mean_cold_start == 0.0
+
+
+def test_slo_violation_bounded(paper_setup):
+    assert paper_setup["ServerlessLoRA"].slo_violation_rate <= 0.15
+
+
+def test_real_serving_under_scheduler_decisions():
+    """The simulator's decisions drive REAL JAX execution: batch assembled
+    by the scheduler runs through the engine with per-request adapters."""
+    cfg = get_smoke("llama2_7b")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg, lora_adapters=4)
+    eng = InferenceEngine(cfg, params, max_context=48)
+    from repro.serverless.batching import BatchProfile, FunctionQueue, Request
+    q = FunctionQueue("fn", BatchProfile(t0=0.1, alpha=0.02, max_batch=4))
+    for i in range(4):
+        q.push(Request(i, "fn", arrival=0.01 * i, prompt_len=16,
+                       output_len=4, slo_ttft=2.5))
+    batch = q.pop_batch()
+    toks = jax.random.randint(jax.random.PRNGKey(1),
+                              (len(batch), 16), 0, cfg.vocab_size)
+    idx = jnp.array([r.req_id % 4 for r in batch], jnp.int32)
+    out, _ = eng.generate(toks, 4, adapter_idx=idx)
+    assert out.shape == (4, 4)
+    assert not np.any(np.isnan(np.asarray(out, np.float32)))
