@@ -1,0 +1,79 @@
+"""Continuous-batching serving demo: a bursty 3-adapter trace replayed
+through the REAL paged multi-LoRA engine.  Requests join free decode slots
+mid-flight (bucketed group prefill + slot-wise KV insert into pool blocks)
+and leave on completion (blocks return to the free list) — the serving-side
+realization of the paper's §4.2 batching + §4.4 unmerged multi-LoRA engine.
+
+Run: PYTHONPATH=src python examples/serve_continuous.py [--rate 2.0]
+"""
+import argparse
+
+import jax
+
+from repro.configs import get_smoke
+from repro.models import transformer as tf
+from repro.serverless.traces import TraceSpec, make_workload
+from repro.serving import ContinuousRuntime, ServingConfig, replay_trace
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--adapters", type=int, default=3)
+    ap.add_argument("--rate", type=float, default=2.0,
+                    help="mean requests/s per adapter function")
+    ap.add_argument("--duration", type=float, default=15.0)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--output-len", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--events", type=int, default=24,
+                    help="how many join/leave events to print")
+    args = ap.parse_args()
+
+    cfg = get_smoke("llama2_7b").with_(name="serve-continuous",
+                                       dtype="float32")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg,
+                            lora_adapters=args.adapters)
+    scfg = ServingConfig(
+        num_slots=args.slots, block_size=8, num_blocks=96,
+        max_blocks_per_slot=8, prefill_buckets=(32,), prefill_group=2,
+        decode_chunk=4)
+    rt = ContinuousRuntime(cfg, params, scfg)
+
+    specs = [TraceSpec(f"fn{a}", "bursty", args.rate, args.duration,
+                       prompt_len=args.prompt_len,
+                       output_len=args.output_len, slo_ttft=3.0)
+             for a in range(args.adapters)]
+    wl = make_workload(specs, seed=args.seed)
+    fn_adapter = {f"fn{a}": a for a in range(args.adapters)}
+    print(f"trace: {len(wl)} requests over {args.duration}s, "
+          f"{args.adapters} bursty adapter functions")
+
+    res, events = replay_trace(rt, wl, fn_adapter, seed=args.seed,
+                               collect_events=True)
+
+    print(f"\nfirst {args.events} runtime events "
+          f"(virtual clock — measured device time):")
+    for e in events[: args.events]:
+        print(f"  t={e.t:8.4f}s {e.kind:7s} req{e.req_id:<4d} "
+              f"slot={e.slot:<2d} {e.detail}")
+
+    ok = [r for r in res.requests if r.first_token >= 0]
+    abandoned = len(res.requests) - len(ok)
+    toks = sum(r.output_len for r in ok)
+    horizon = max((r.done for r in ok), default=1e-9)
+    print(f"\nserved {len(ok)}/{len(res.requests)} requests "
+          f"({abandoned} abandoned past SLO)")
+    print(f"mean TTFT {res.mean_ttft * 1000:7.1f} ms   "
+          f"p99 TTFT {res.p99_ttft * 1000:7.1f} ms")
+    print(f"mean TPOT {res.mean_tpot * 1000:7.2f} ms   "
+          f"throughput {toks / horizon:7.1f} tok/s (virtual)")
+    print(f"SLO violations {res.slo_violation_rate * 100:.1f}%")
+    print(f"pool: {rt.pool.num_blocks} blocks x {rt.pool.block_size} tokens, "
+          f"in use after drain: {rt.pool.in_use} (must be 0)")
+    print(f"decode compiles after warmup: {rt.decode_compiles()} "
+          f"(fixed-shape slot batch -> exactly 1)")
+
+
+if __name__ == "__main__":
+    main()

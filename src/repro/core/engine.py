@@ -22,15 +22,16 @@ Params = Dict[str, Any]
 
 
 def make_prefill_step(cfg: ModelConfig):
-    """(params, tokens, cache [, embeds/frame_embeds, adapter_idx])
-    -> (last-token logits, filled cache)."""
+    """(params, tokens, cache [, embeds/frame_embeds, adapter_idx, last_pos])
+    -> (last-token logits, filled cache).  last_pos: (B,) per-row index of
+    the true last prompt token (bucketed right-padded serving prefill)."""
 
     def prefill_step(params, tokens, cache, *, embeds=None, frame_embeds=None,
-                     adapter_idx=None):
+                     adapter_idx=None, last_pos=None):
         logits, cache, _ = tf.forward(
             params, cfg, tokens, cache=cache, embeds=embeds,
             frame_embeds=frame_embeds, adapter_idx=adapter_idx,
-            last_only=True)
+            last_only=last_pos is None, last_pos=last_pos)
         return logits[:, -1], cache
 
     return prefill_step
@@ -38,13 +39,79 @@ def make_prefill_step(cfg: ModelConfig):
 
 def make_serve_step(cfg: ModelConfig):
     """ONE-token decode against an existing cache — the unit the decode
-    input shapes lower (decode_32k / long_500k)."""
+    input shapes lower (decode_32k / long_500k).  With a paged cache,
+    ``pos`` is (B,) per-slot positions and ``block_tbl`` (B, MB) maps each
+    slot's logical blocks to pool blocks (continuous-batching serving)."""
 
-    def serve_step(params, token, cache, pos, *, adapter_idx=None):
+    def serve_step(params, token, cache, pos, *, adapter_idx=None,
+                   block_tbl=None):
         return tf.decode_step(params, cfg, token, cache, pos,
-                              adapter_idx=adapter_idx)
+                              adapter_idx=adapter_idx, block_tbl=block_tbl)
 
     return serve_step
+
+
+# ------------------------------------------------------- slot-wise cache ops
+def make_insert_fn(cfg: ModelConfig, block_size: int):
+    """Slot-wise cache *insert*: scatter a prefilled contiguous cache into
+    pool blocks.  ``block_ids``: (G, nb) int32 physical block ids per row —
+    entries equal to the garbage block (0) dump right-padding junk that the
+    decode mask never reads.  Returns a pure fn to be jitted by the caller:
+    (pool_cache, prefill_cache, block_ids) -> pool_cache."""
+
+    def insert_layer(pool_l, pre_l, block_ids, stacked):
+        out = dict(pool_l)
+        for src, dst in (("k", "kp"), ("v", "vp")):
+            x = pre_l[src]                      # (P, G, S, K, hd) | (G, S, …)
+            seq_ax = 2 if stacked else 1
+            S = x.shape[seq_ax]
+            xr = x.reshape(*x.shape[:seq_ax], S // block_size, block_size,
+                           *x.shape[seq_ax + 1:])
+            idx = (slice(None), block_ids) if stacked else block_ids
+            out[dst] = pool_l[dst].at[idx].set(xr.astype(pool_l[dst].dtype))
+        return out
+
+    def insert(pool_cache, prefill_cache, block_ids):
+        return {
+            "periods": {
+                pj: insert_layer(pl, prefill_cache["periods"][pj],
+                                 block_ids, True)
+                for pj, pl in pool_cache["periods"].items()},
+            "tail": tuple(
+                insert_layer(pl, prefill_cache["tail"][i], block_ids, False)
+                for i, pl in enumerate(pool_cache["tail"])),
+        }
+
+    return insert
+
+
+def make_extract_fn(cfg: ModelConfig, block_size: int):
+    """Slot-wise cache *extract* (inverse of insert, for tests/migration):
+    gather one slot's blocks back into contiguous per-layer K/V.
+    (pool_cache, block_ids (nb,)) -> {"periods": {pj: {"k": (P, nb*bs, K,
+    hd), "v": …}}, "tail": (…)}."""
+
+    def extract(pool_cache, block_ids):
+        def one(pool_l, stacked):
+            nb = block_ids.shape[0]
+            if stacked:
+                k = pool_l["kp"][:, block_ids]   # (P, nb, bs, K, hd)
+                v = pool_l["vp"][:, block_ids]
+                P = k.shape[0]
+                return {"k": k.reshape(P, nb * block_size, *k.shape[3:]),
+                        "v": v.reshape(P, nb * block_size, *v.shape[3:])}
+            k = pool_l["kp"][block_ids]
+            v = pool_l["vp"][block_ids]
+            return {"k": k.reshape(nb * block_size, *k.shape[2:]),
+                    "v": v.reshape(nb * block_size, *v.shape[2:])}
+
+        return {
+            "periods": {pj: one(pl, True)
+                        for pj, pl in pool_cache["periods"].items()},
+            "tail": tuple(one(pl, False) for pl in pool_cache["tail"]),
+        }
+
+    return extract
 
 
 class InferenceEngine:

@@ -24,6 +24,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
+_CompilerParams = tpu_compiler_params()
+
 NEG_INF = -1e30
 
 
@@ -105,7 +109,7 @@ def decode_attention(q, k, v, slot_pos, pos, *,
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(pos.reshape(1), q, k, v, slot_pos)

@@ -20,6 +20,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
+_CompilerParams = tpu_compiler_params()
+
 
 def _sgmv_kernel(idx_ref, x_ref, a_ref, b_ref, y_ref, acc_ref, *,
                  n_d: int, scaling: float):
@@ -87,7 +91,7 @@ def sgmv(x, a, b, block_idx, *, row_block: int = 8,
             scratch_shapes=[pltpu.VMEM((row_block, r), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((R, O), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(block_idx, x, a, b)

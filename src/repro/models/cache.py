@@ -55,6 +55,59 @@ def layer_cache(kind: str, cfg: ModelConfig, batch: int, cache_len: int,
     raise ValueError(kind)
 
 
+# ------------------------------------------------------------------- paging
+# Paged KV layout (serving runtime, paper §4.2/§4.4): the per-layer cache is
+# a pool of fixed-size blocks shared by every decode slot.  A host-side block
+# table (B, max_blocks) int32 maps each slot's logical block j (token
+# positions [j*bs, (j+1)*bs)) to a physical block id; -1 marks unallocated
+# entries.  Physical block 0 is reserved as a *garbage* block: writes from
+# inactive/stalled slots (table entry -1) are clipped onto it and never read
+# back, which keeps the jitted decode step branch-free and fixed-shape.
+GARBAGE_BLOCK = 0
+
+
+def paged_attn_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     dtype) -> Cache:
+    """One attention layer's block pool: {"kp","vp"}: (NB, bs, K, hd)."""
+    K, hd = cfg.num_kv_heads, cfg.head_dim_
+    return {
+        "kp": jnp.zeros((num_blocks, block_size, K, hd), dtype),
+        "vp": jnp.zeros((num_blocks, block_size, K, hd), dtype),
+    }
+
+
+def paging_unsupported_reason(cfg: ModelConfig) -> Optional[str]:
+    """None if the config can be served by the paged runtime."""
+    kinds = set(cfg.pattern) | set(cfg.remainder_layers)
+    if kinds != {ATTN}:
+        return f"paged serving needs attention-only stacks, got {sorted(kinds)}"
+    if cfg.cross_attention or cfg.encoder_layers:
+        return "paged serving does not support encoder/cross-attention models"
+    if cfg.sliding_window is not None:
+        return "paged serving does not support native sliding-window configs"
+    return None
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     dtype: Optional[Any] = None) -> Cache:
+    """Full-model paged cache: same {"periods","tail"} pytree as init_cache,
+    but each attention layer holds a block pool instead of a per-row ring
+    buffer.  The block table lives outside the pytree (it is a decode-step
+    argument), so host-side allocation never rebuilds the cache."""
+    reason = paging_unsupported_reason(cfg)
+    if reason is not None:
+        raise ValueError(reason)
+    dtype = dtype or cfg.jnp_dtype
+    periods = {}
+    for j, _ in enumerate(cfg.pattern):
+        per = [paged_attn_cache(cfg, num_blocks, block_size, dtype)
+               for _ in range(cfg.num_periods)]
+        periods[f"p{j}"] = _stack(per)
+    tail = tuple(paged_attn_cache(cfg, num_blocks, block_size, dtype)
+                 for _ in cfg.remainder_layers)
+    return {"periods": periods, "tail": tail}
+
+
 def effective_cache_len(cfg: ModelConfig, context_len: int) -> int:
     """Physical KV length: ring buffer bounded by the sliding window."""
     if cfg.sliding_window is not None:

@@ -227,12 +227,18 @@ def apply_attention(p: Params, cfg: ModelConfig, x, *, positions,
                     cache: Optional[Params] = None, kv_x=None,
                     mask_kind: str = "causal", prefix_len: int = 0,
                     window: Optional[int] = None, adapter_idx=None,
-                    use_chunked: bool = False, use_rope: bool = True):
+                    use_chunked: bool = False, use_rope: bool = True,
+                    block_tbl=None):
     """GQA attention with optional KV cache (decode) and cross-attention.
 
     x: (B, T, D). positions: (T,) or (B, T) absolute positions of x tokens.
     cache: {"k","v": (B, S, K, hd), "slot_pos": (S,) int32, "idx": ()} — decode
     writes one token at rolling slot idx % S and attends over the cache.
+    Paged cache (serving): {"kp","vp": (NB, bs, K, hd)} block pools shared by
+    all rows, addressed through ``block_tbl`` (B, MB) int32 — each row writes
+    its token at block_tbl[b, pos//bs] offset pos%bs and attends over a
+    gathered (B, MB*bs) view of its own blocks; -1 table entries clip onto
+    the reserved garbage block 0 and are masked out by position.
     kv_x: encoder output for cross-attention (keys/values from it, no cache).
     Returns (out, new_cache).
     """
@@ -258,7 +264,28 @@ def apply_attention(p: Params, cfg: ModelConfig, x, *, positions,
         k = rope(k, positions, cfg.rope_theta)
 
     new_cache = cache
-    if cache is not None and kv_x is None:
+    if cache is not None and "kp" in cache and kv_x is None:
+        # Paged decode: per-row single-token write into the block pool, then
+        # a gather-based block-table lookup for the attended K/V view.
+        assert T == 1, "paged cache is decode-only (T == 1)"
+        assert block_tbl is not None, "paged cache requires block_tbl"
+        bs = cache["kp"].shape[1]
+        pos = positions[:, -1]                                   # (B,)
+        blk = jnp.take_along_axis(block_tbl, (pos // bs)[:, None],
+                                  axis=1)[:, 0]
+        blk = jnp.maximum(blk, 0)          # -1 (inactive row) -> garbage blk
+        off = pos % bs
+        kp = cache["kp"].at[blk, off].set(k[:, 0].astype(cache["kp"].dtype))
+        vp = cache["vp"].at[blk, off].set(v[:, 0].astype(cache["vp"].dtype))
+        new_cache = {"kp": kp, "vp": vp}
+        phys = jnp.maximum(block_tbl, 0)                         # (B, MB)
+        k = kp[phys].reshape(B, -1, K, hd)                       # (B, MB*bs,…)
+        v = vp[phys].reshape(B, -1, K, hd)
+        # logical key index == absolute token position; keys past the row's
+        # current position (unallocated / garbage-clipped) are masked causally
+        k_pos = jnp.broadcast_to(jnp.arange(k.shape[1])[None],
+                                 (B, k.shape[1]))
+    elif cache is not None and kv_x is None:
         # Ring-buffer write of T tokens at slot = idx % S.  Engine guarantees
         # slot + T <= S (prefill writes at idx=0 with T <= S; decode T=1).
         S = cache["k"].shape[1]

@@ -172,7 +172,8 @@ def _cross_attention(lp: Params, cfg: ModelConfig, h, enc_out, cache):
 
 def _apply_layer(kind: str, lp: Params, cfg: ModelConfig, x, *, positions,
                  cache, mask_kind: str, prefix_len: int, adapter_idx,
-                 enc_out, use_chunked: bool, fill_cache: bool):
+                 enc_out, use_chunked: bool, fill_cache: bool,
+                 block_tbl=None):
     """One residual block. Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     h = apply_norm(x, lp["norm1"], cfg.norm_type)
@@ -186,7 +187,7 @@ def _apply_layer(kind: str, lp: Params, cfg: ModelConfig, x, *, positions,
             lp["attn"], cfg, h, positions=positions, cache=attn_cache_in,
             mask_kind=mask_kind, prefix_len=prefix_len,
             window=cfg.sliding_window, adapter_idx=adapter_idx,
-            use_chunked=use_chunked, use_rope=True)
+            use_chunked=use_chunked, use_rope=True, block_tbl=block_tbl)
         if ring_overflow:
             # SWA prefill longer than the window: keep only the last Tc K/V.
             from repro.models.layers import dense, rope
@@ -274,7 +275,7 @@ def encode(params: Params, cfg: ModelConfig, frame_embeds) -> jnp.ndarray:
 # -------------------------------------------------------------------- forward
 def _run_stack(params, cfg: ModelConfig, x, *, positions, cache, mask_kind,
                prefix_len, adapter_idx, enc_out, use_chunked, fill_cache,
-               remat: bool):
+               remat: bool, block_tbl=None):
     pat = cfg.pattern
     aux_total = jnp.zeros((), jnp.float32)
 
@@ -288,7 +289,8 @@ def _run_stack(params, cfg: ModelConfig, x, *, positions, cache, mask_kind,
                 kind, lps[f"p{j}"], cfg, x, positions=positions, cache=c_j,
                 mask_kind=mask_kind, prefix_len=prefix_len,
                 adapter_idx=adapter_idx, enc_out=enc_out,
-                use_chunked=use_chunked, fill_cache=fill_cache)
+                use_chunked=use_chunked, fill_cache=fill_cache,
+                block_tbl=block_tbl)
             new_cs[f"p{j}"] = nc
             aux = aux + a
         return (x, aux), new_cs
@@ -312,7 +314,8 @@ def _run_stack(params, cfg: ModelConfig, x, *, positions, cache, mask_kind,
             kind, params["tail"][i], cfg, x, positions=positions, cache=c_i,
             mask_kind=mask_kind, prefix_len=prefix_len,
             adapter_idx=adapter_idx, enc_out=enc_out,
-            use_chunked=use_chunked, fill_cache=fill_cache)
+            use_chunked=use_chunked, fill_cache=fill_cache,
+            block_tbl=block_tbl)
         new_tail.append(nc)
         aux_total = aux_total + a
 
@@ -335,7 +338,8 @@ def forward(params: Params, cfg: ModelConfig, tokens, *,
             cache: Optional[Dict] = None,
             adapter_idx=None, remat: bool = False,
             use_chunked: Optional[bool] = None,
-            last_only: bool = False
+            last_only: bool = False,
+            last_pos: Optional[jnp.ndarray] = None
             ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
     """Train (cache=None) or prefill (cache=zeros pytree → filled).
 
@@ -360,6 +364,13 @@ def forward(params: Params, cfg: ModelConfig, tokens, *,
         params, cfg, x, positions=positions, cache=cache, mask_kind=mask_kind,
         prefix_len=prefix_len, adapter_idx=adapter_idx, enc_out=enc_out,
         use_chunked=use_chunked, fill_cache=cache is not None, remat=remat)
+    if last_pos is not None:
+        # bucketed serving prefill: rows are right-padded, so the logit that
+        # samples the first output token lives at a per-row index, not -1
+        idx = jnp.broadcast_to(last_pos[:, None, None].astype(jnp.int32),
+                               (x.shape[0], 1, x.shape[-1]))
+        logits = _logits(params, cfg, jnp.take_along_axis(x, idx, axis=1))
+        return logits, new_cache, aux
     if last_only:
         # prefill fast path: only the last position feeds the LM head —
         # avoids a (B, T, V) logits tensor (and its vocab-parallel
@@ -371,17 +382,25 @@ def forward(params: Params, cfg: ModelConfig, tokens, *,
 
 
 def decode_step(params: Params, cfg: ModelConfig, token, cache, pos, *,
-                adapter_idx=None) -> Tuple[jnp.ndarray, Dict]:
-    """ONE decode step. token: (B,) int32; pos: () int32 absolute position;
-    cache: filled cache pytree. Returns (logits (B, V), new_cache)."""
+                adapter_idx=None, block_tbl=None) -> Tuple[jnp.ndarray, Dict]:
+    """ONE decode step. token: (B,) int32; pos: () int32 absolute position,
+    or (B,) int32 per-row positions (continuous batching: each slot decodes
+    at its own depth); cache: filled cache pytree — contiguous ring caches,
+    or a paged block-pool cache addressed via block_tbl (B, MB) int32.
+    Returns (logits (B, V), new_cache)."""
     B = token.shape[0]
     x = _constrain(jnp.take(params["embed"], token[:, None],
                             axis=0))  # (B, 1, D)
-    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+    else:
+        positions = pos[:, None].astype(jnp.int32)
     x, new_cache, _ = _run_stack(
         params, cfg, x, positions=positions, cache=cache, mask_kind="causal",
         prefix_len=0, adapter_idx=adapter_idx, enc_out=None,
-        use_chunked=False, fill_cache=False, remat=False)
+        use_chunked=False, fill_cache=False, remat=False,
+        block_tbl=block_tbl)
     return _logits(params, cfg, x)[:, 0], new_cache
 
 

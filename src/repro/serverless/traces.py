@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import zlib
 from typing import Dict, List, Sequence
 
 import numpy as np
@@ -35,7 +36,10 @@ class TraceSpec:
 
 def gen_arrivals(spec: TraceSpec, seed: int = 0) -> np.ndarray:
     """Gamma-renewal arrival times in [0, duration]."""
-    rng = np.random.default_rng(seed ^ hash(spec.fn_id) % (2 ** 31))
+    # stable digest, NOT hash(): str hashing is salted per process, which
+    # would make "seeded" traces differ from one run to the next
+    fn_digest = zlib.crc32(spec.fn_id.encode()) & 0x7FFFFFFF
+    rng = np.random.default_rng(seed ^ fn_digest)
     cov = PATTERNS[spec.pattern]
     k = 1.0 / (cov * cov)
     mean_gap = 1.0 / spec.mean_rate

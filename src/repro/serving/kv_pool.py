@@ -1,0 +1,71 @@
+"""Host-side paged KV-cache block manager.
+
+The device-side pools (``models.cache.init_paged_cache``) are dumb arrays;
+this manager owns which physical blocks are free.  Allocation is
+all-or-nothing (a request either gets every block it asked for or none), so
+a failed admission has no cleanup path.  Physical block 0 is the reserved
+*garbage* block (``models.cache.GARBAGE_BLOCK``): inactive or stalled decode
+rows write there and the position mask guarantees it is never read back, so
+it is never handed out.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.models.cache import GARBAGE_BLOCK
+
+
+def blocks_for_tokens(n_tokens: int, block_size: int) -> int:
+    """Blocks needed to hold token positions [0, n_tokens)."""
+    if n_tokens <= 0:
+        return 0
+    return (n_tokens + block_size - 1) // block_size
+
+
+class BlockPool:
+    """Free-list over physical block ids [1, num_blocks)."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is the garbage block)")
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        # LIFO free-list, low ids first out — recently-freed blocks are
+        # recycled immediately (the gather does not care about locality)
+        self._free: List[int] = list(range(num_blocks - 1, GARBAGE_BLOCK, -1))
+        self._in_use: set = set()
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return len(self._in_use)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return blocks_for_tokens(n_tokens, self.block_size)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop ``n`` blocks, or None if the pool cannot cover all of them."""
+        if n < 0:
+            raise ValueError(n)
+        if n > len(self._free):
+            return None
+        ids = [self._free.pop() for _ in range(n)]
+        self._in_use.update(ids)
+        return ids
+
+    def free(self, ids: List[int]) -> None:
+        """Return blocks.  Double-free / foreign ids are bugs, not warnings."""
+        for b in ids:
+            if b not in self._in_use:
+                raise KeyError(f"free of unallocated block {b}")
+            self._in_use.discard(b)
+            self._free.append(b)
+
+    def reset(self) -> None:
+        self._free = list(range(self.num_blocks - 1, GARBAGE_BLOCK, -1))
+        self._in_use.clear()

@@ -1,0 +1,321 @@
+"""Continuous-batching runtime over the paged multi-LoRA engine.
+
+The decode loop is ONE jitted function with fixed shapes — (num_slots,)
+tokens/positions/adapters and a (num_slots, max_blocks) block table — so it
+compiles exactly once; requests join and leave by mutating host-side numpy
+mirrors, never the compiled program.  Decode runs in chunks of
+``decode_chunk`` tokens (a ``lax.scan``) to amortize dispatch overhead;
+slots join/leave at chunk boundaries, which is the standard multi-step
+scheduling granularity trade-off.
+
+Join path (prompt prefill): prompts are right-padded to a fixed bucket
+length and prefilled as a group of ``prefill_group`` rows (fill-or-expire
+decides grouping upstream), then the prefilled contiguous K/V is scattered
+slot-wise into pool blocks (``core.engine.make_insert_fn``).  Right-padding
+junk inside the bucket lands either in blocks the decode loop overwrites
+before it can be attended, or in the reserved garbage block.
+
+Leave path: EOS / token budget exhausted -> blocks return to the free list.
+If the pool runs dry mid-flight a slot *stalls*: it still runs the chunk
+from its current (token, pos) — writes into allocated blocks are identical
+to what the eventual resume writes, overflow writes clip to the garbage
+block — but its outputs are discarded and it does not advance.  If every
+slot stalls the runtime force-evicts the stalled slot closest to
+completion so the system always makes progress.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import (make_insert_fn, make_prefill_step,
+                               make_serve_step)
+from repro.models import transformer as tf
+from repro.models.cache import (GARBAGE_BLOCK, init_paged_cache,
+                                paging_unsupported_reason)
+from repro.models.config import ModelConfig
+from repro.serverless.batching import Request
+from repro.serving.kv_pool import BlockPool, blocks_for_tokens
+from repro.serving.slots import SlotState, SlotTable
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    num_slots: int = 8
+    block_size: int = 16
+    num_blocks: int = 64             # physical blocks incl. the garbage block
+    max_blocks_per_slot: int = 8
+    prefill_buckets: Tuple[int, ...] = (32, 64)
+    prefill_group: int = 2           # rows per bucketed prefill dispatch
+    decode_chunk: int = 4            # tokens per jitted decode dispatch
+    eos_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class AdmitResult:
+    slot_ids: List[int]
+    first_tokens: List[int]
+    finished: List[SlotState]        # output_len == 1 completes at prefill
+    dt: float
+
+
+@dataclasses.dataclass
+class DecodeResult:
+    emitted: Dict[int, List[int]]    # sid -> tokens accepted this chunk
+    finished: List[SlotState]
+    aborted: List[SlotState]         # force-evicted on pool exhaustion
+    stalled: List[int]
+    dt: float
+
+
+class ContinuousRuntime:
+    def __init__(self, cfg: ModelConfig, params, scfg: ServingConfig):
+        reason = paging_unsupported_reason(cfg)
+        if reason is not None:
+            raise ValueError(reason)
+        for b in scfg.prefill_buckets:
+            if b % scfg.block_size:
+                raise ValueError(
+                    f"bucket {b} not a multiple of block_size")
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self.pool = BlockPool(scfg.num_blocks, scfg.block_size)
+        self.slots = SlotTable(scfg.num_slots, scfg.max_blocks_per_slot)
+        self.cache = init_paged_cache(cfg, scfg.num_blocks, scfg.block_size)
+
+        serve = make_serve_step(cfg)
+        prefill = make_prefill_step(cfg)
+
+        def decode_chunk(params, tok, cache, pos, tbl, ai):
+            def body(carry, _):
+                tok, cache, pos = carry
+                logits, cache = serve(params, tok, cache, pos,
+                                      adapter_idx=ai, block_tbl=tbl)
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return (nxt, cache, pos + 1), nxt
+
+            (_, cache, _), toks = jax.lax.scan(
+                body, (tok, cache, pos), None, length=scfg.decode_chunk)
+            return toks.T, cache                       # (B, K)
+
+        insert = make_insert_fn(cfg, scfg.block_size)
+
+        def prefill_insert(params, tokens, last_pos, ai, pool_cache, ids):
+            """Fused join: bucketed group prefill + slot-wise block scatter
+            in ONE dispatch (admission happens between decode chunks, so its
+            dispatch overhead is pure decode stall)."""
+            cache = tf.init_cache(cfg, tokens.shape[0], tokens.shape[1])
+            logits, cache = prefill(params, tokens, cache,
+                                    adapter_idx=ai, last_pos=last_pos)
+            first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return first, insert(pool_cache, cache, ids)
+
+        self._decode = jax.jit(decode_chunk, donate_argnums=(2,))
+        self._prefill = jax.jit(prefill_insert, donate_argnums=(4,))
+
+    # ------------------------------------------------------------ capacity
+    def max_output_for(self, prompt_len: int) -> int:
+        """Largest output_len a request with this prompt can be granted."""
+        cap = self.scfg.max_blocks_per_slot * self.scfg.block_size
+        return cap - prompt_len + 1        # last KV write is L + out - 2
+
+    def fits(self, prompt_len: int, output_len: int) -> bool:
+        if prompt_len < 1 or prompt_len > max(self.scfg.prefill_buckets):
+            return False
+        return output_len <= self.max_output_for(prompt_len)
+
+    def bucket_for(self, prompt_len: int) -> int:
+        for b in sorted(self.scfg.prefill_buckets):
+            if prompt_len <= b:
+                return b
+        raise ValueError(f"prompt_len {prompt_len} exceeds largest bucket")
+
+    def admit_cost_blocks(self, prompt_len: int, output_len: int = 2) -> int:
+        # blocks covering positions 0..prompt_len: the prompt plus the first
+        # decode write at position L — which never happens for single-token
+        # requests (they finish at prefill)
+        extra = 1 if output_len > 1 else 0
+        return blocks_for_tokens(prompt_len + extra, self.scfg.block_size)
+
+    # ----------------------------------------------------------- admission
+    def try_admit(self, items: Sequence[Tuple[Request, np.ndarray, int]]
+                  ) -> Optional[AdmitResult]:
+        """Join ``(request, prompt_tokens, adapter)`` tuples into free slots.
+
+        All-or-nothing: returns None (no state change) if slots or blocks
+        are short.  len(items) must be <= prefill_group."""
+        scfg = self.scfg
+        assert 0 < len(items) <= scfg.prefill_group
+        free = self.slots.free_slots()
+        if len(items) > len(free):
+            return None
+        need = sum(self.admit_cost_blocks(len(p), r.output_len)
+                   for r, p, _ in items)
+        if need > self.pool.available:
+            return None
+        for r, p, _ in items:
+            if not self.fits(len(p), max(r.output_len, 1)):
+                raise ValueError(
+                    f"req {r.req_id}: prompt {len(p)} / output "
+                    f"{r.output_len} exceeds slot KV capacity")
+
+        bucket = self.bucket_for(max(len(p) for _, p, _ in items))
+        nb_insert = bucket // scfg.block_size
+        G = scfg.prefill_group
+        tokens = np.zeros((G, bucket), np.int32)
+        last_pos = np.zeros((G,), np.int32)
+        adapters = np.zeros((G,), np.int32)
+        ids_mat = np.full((G, nb_insert), GARBAGE_BLOCK, np.int32)
+        allocs: List[List[int]] = []
+        for i, (req, prompt, adapter) in enumerate(items):
+            L = len(prompt)
+            ids = self.pool.alloc(self.admit_cost_blocks(L, req.output_len))
+            assert ids is not None            # covered by the `need` check
+            allocs.append(ids)
+            tokens[i, :L] = prompt
+            last_pos[i] = L - 1
+            adapters[i] = adapter
+            ids_mat[i, : min(len(ids), nb_insert)] = ids[:nb_insert]
+
+        t0 = time.perf_counter()
+        first, self.cache = self._prefill(
+            self.params, jnp.asarray(tokens), jnp.asarray(last_pos),
+            jnp.asarray(adapters), self.cache, jnp.asarray(ids_mat))
+        first = np.asarray(first)             # blocks until device is done
+        dt = time.perf_counter() - t0
+
+        slot_ids, first_tokens, finished = [], [], []
+        for i, (req, prompt, adapter) in enumerate(items):
+            sid = free[i]
+            st = SlotState(sid=sid, req=req, adapter=adapter,
+                           prompt_len=len(prompt),
+                           budget=max(req.output_len, 1), pos=len(prompt),
+                           blocks=allocs[i], last_token=int(first[i]))
+            slot_ids.append(sid)
+            first_tokens.append(int(first[i]))
+            done = st.budget == 1 or (scfg.eos_id is not None
+                                      and int(first[i]) == scfg.eos_id)
+            if done:
+                self.pool.free(st.blocks)
+                finished.append(st)
+            else:
+                self.slots.bind(st, int(first[i]))
+        return AdmitResult(slot_ids, first_tokens, finished, dt)
+
+    # -------------------------------------------------------------- decode
+    def _ensure_blocks(self) -> Tuple[List[int], List[SlotState]]:
+        """On-demand allocation for this chunk's writes; stall on shortage,
+        force-evict one slot if *everyone* stalls (progress guarantee)."""
+        scfg, aborted = self.scfg, []
+        while True:
+            stalled = []
+            for s in self.slots.active():
+                s.stalled = False
+                last_pos = min(s.pos + scfg.decode_chunk - 1,
+                               s.prompt_len + s.budget - 2)
+                while len(s.blocks) * scfg.block_size <= last_pos:
+                    ids = self.pool.alloc(1)
+                    if ids is None:
+                        s.stalled = True
+                        break
+                    self.slots.grow(s.sid, ids[0])
+                if s.stalled:
+                    stalled.append(s)
+            if stalled and len(stalled) == self.slots.num_active:
+                victim = min(stalled, key=lambda s: s.budget - s.produced)
+                victim.req.breakdown["aborted_oom"] = 1.0
+                self.pool.free(self.slots.release(victim.sid))
+                aborted.append(victim)
+                continue
+            return [s.sid for s in stalled], aborted
+
+    def decode(self) -> Optional[DecodeResult]:
+        """One fixed-shape decode chunk across every slot (inactive rows
+        write to the garbage block and are ignored)."""
+        if self.slots.num_active == 0:
+            return None
+        scfg = self.scfg
+        stalled, aborted = self._ensure_blocks()
+        if self.slots.num_active == 0:      # everything aborted
+            return DecodeResult({}, [], aborted, stalled, 0.0)
+
+        # Stalled slots run the chunk unmodified from (pending token, pos):
+        # writes into their allocated blocks are bit-identical to the writes
+        # the eventual resume will make (greedy decode is deterministic), and
+        # writes past the allocated suffix clip to the garbage block — so
+        # discarding the outputs and not advancing pos is a true no-op.
+        t0 = time.perf_counter()
+        toks, self.cache = self._decode(
+            self.params, jnp.asarray(self.slots.tokens), self.cache,
+            jnp.asarray(self.slots.pos), jnp.asarray(self.slots.block_tbl),
+            jnp.asarray(self.slots.adapter))
+        toks = np.asarray(toks)                            # (B, K), sync
+        dt = time.perf_counter() - t0
+
+        emitted: Dict[int, List[int]] = {}
+        finished: List[SlotState] = []
+        for s in list(self.slots.active()):
+            if s.stalled:
+                continue
+            remaining = s.budget - s.produced
+            accept = toks[s.sid, :remaining]
+            eos_hit = False
+            if scfg.eos_id is not None:
+                hits = np.flatnonzero(accept == scfg.eos_id)
+                if hits.size:
+                    accept = accept[: hits[0] + 1]
+                    eos_hit = True
+            emitted[s.sid] = [int(t) for t in accept]
+            s.produced += len(accept)
+            if eos_hit or s.produced >= s.budget:
+                self.pool.free(self.slots.release(s.sid))
+                finished.append(s)
+            else:
+                s.pos += scfg.decode_chunk
+                s.last_token = int(accept[-1])
+                self.slots.pos[s.sid] = s.pos
+                self.slots.tokens[s.sid] = s.last_token
+        return DecodeResult(emitted, finished, aborted, stalled, dt)
+
+    # -------------------------------------------------------------- meta
+    def warmup(self) -> Dict[str, Any]:
+        """Compile every fixed shape (decode chunk, each prefill bucket +
+        insert) and measure steady-state latencies.  Leaves pool and slots
+        untouched (warmup traffic only ever writes the garbage block)."""
+        scfg, timings = self.scfg, {"prefill_s": {}}
+        G = scfg.prefill_group
+        for bucket in scfg.prefill_buckets:
+            ids = jnp.full((G, bucket // scfg.block_size), GARBAGE_BLOCK,
+                           jnp.int32)
+            for rep in range(2):
+                t0 = time.perf_counter()
+                first, self.cache = self._prefill(
+                    self.params, jnp.zeros((G, bucket), jnp.int32),
+                    jnp.zeros((G,), jnp.int32), jnp.zeros((G,), jnp.int32),
+                    self.cache, ids)
+                np.asarray(first)
+                timings["prefill_s"][bucket] = time.perf_counter() - t0
+        for rep in range(2):
+            t0 = time.perf_counter()
+            toks, self.cache = self._decode(
+                self.params, jnp.asarray(self.slots.tokens), self.cache,
+                jnp.asarray(self.slots.pos),
+                jnp.asarray(self.slots.block_tbl),
+                jnp.asarray(self.slots.adapter))
+            np.asarray(toks)
+            timings["decode_chunk_s"] = time.perf_counter() - t0
+        return timings
+
+    def decode_compiles(self) -> int:
+        """Compile-count probe for the decode step (must be 1 after warmup;
+        re-jit mid-serving would blow every TPOT SLO)."""
+        try:
+            return int(self._decode._cache_size())
+        except AttributeError:              # older/newer jax without probe
+            return -1

@@ -1,0 +1,37 @@
+"""Optional-hypothesis shim: property tests run when hypothesis is
+installed and SKIP (instead of aborting collection) when it is not.
+
+Usage in test modules:  ``from _hypothesis_compat import given, settings, st``
+"""
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _NullStrategies:
+        """st.<anything>(...) placeholder — never executed, only built at
+        decoration time."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _NullStrategies()
+
+    def given(*_a, **_k):
+        def deco(fn):
+            # NOTE: deliberately no functools.wraps — the skipper must have
+            # an EMPTY signature or pytest mistakes the hypothesis params
+            # for fixtures
+            def skipper():
+                pytest.skip("hypothesis not installed")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco
+
+    def settings(*_a, **_k):
+        return lambda fn: fn

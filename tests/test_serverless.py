@@ -3,7 +3,7 @@ offloader invariants, traces, cost meter — including hypothesis property
 tests on the schedulers."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.models.config import ModelConfig
 from repro.serverless.artifacts import Artifact, Kind, Tier

@@ -1,0 +1,56 @@
+"""serverless/traces.py: CoV bucket fidelity and seeded determinism."""
+import numpy as np
+import pytest
+
+from repro.serverless.traces import (PATTERNS, TraceSpec, gen_arrivals,
+                                     make_workload, measured_cov)
+
+BUCKETS = {          # paper §6.1: CoV-based trace classes
+    "predictable": (0.0, 1.0),
+    "normal": (1.0, 4.0),
+    "bursty": (4.0, float("inf")),
+}
+
+
+@pytest.mark.parametrize("pattern", sorted(PATTERNS))
+@pytest.mark.parametrize("seed", [0, 1, 7])
+def test_cov_lands_in_declared_bucket(pattern, seed):
+    spec = TraceSpec("fnA", pattern, mean_rate=8.0, duration_s=600.0)
+    arr = gen_arrivals(spec, seed)
+    assert len(arr) > 500, "need enough arrivals for a stable CoV estimate"
+    cov = measured_cov(arr)
+    lo, hi = BUCKETS[pattern]
+    assert lo <= cov <= hi, f"{pattern}: CoV {cov:.2f} outside ({lo}, {hi}]"
+
+
+def test_arrivals_sorted_and_bounded():
+    spec = TraceSpec("fnA", "bursty", 5.0, 120.0)
+    arr = gen_arrivals(spec, 3)
+    assert np.all(np.diff(arr) >= 0)
+    assert arr.min() >= 0.0 and arr.max() < spec.duration_s
+
+
+def test_seeded_generation_deterministic():
+    spec = TraceSpec("fnA", "normal", 4.0, 300.0)
+    a = gen_arrivals(spec, 42)
+    b = gen_arrivals(spec, 42)
+    np.testing.assert_array_equal(a, b)
+    c = gen_arrivals(spec, 43)
+    assert len(a) != len(c) or not np.array_equal(a, c)
+
+
+def test_distinct_functions_get_distinct_streams():
+    a = gen_arrivals(TraceSpec("fnA", "normal", 4.0, 300.0), 0)
+    b = gen_arrivals(TraceSpec("fnB", "normal", 4.0, 300.0), 0)
+    assert len(a) != len(b) or not np.array_equal(a, b)
+
+
+def test_make_workload_merged_sorted_reindexed():
+    specs = [TraceSpec(f"fn{i}", "bursty", 2.0, 60.0) for i in range(3)]
+    wl = make_workload(specs, seed=5)
+    arrivals = [w["arrival"] for w in wl]
+    assert arrivals == sorted(arrivals)
+    assert [w["req_id"] for w in wl] == list(range(len(wl)))
+    assert {w["fn_id"] for w in wl} == {"fn0", "fn1", "fn2"}
+    wl2 = make_workload(specs, seed=5)
+    assert wl == wl2
