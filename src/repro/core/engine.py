@@ -44,9 +44,10 @@ def make_serve_step(cfg: ModelConfig):
     slot's logical blocks to pool blocks (continuous-batching serving)."""
 
     def serve_step(params, token, cache, pos, *, adapter_idx=None,
-                   block_tbl=None):
+                   block_tbl=None, use_paged_kernel=False):
         return tf.decode_step(params, cfg, token, cache, pos,
-                              adapter_idx=adapter_idx, block_tbl=block_tbl)
+                              adapter_idx=adapter_idx, block_tbl=block_tbl,
+                              use_paged_kernel=use_paged_kernel)
 
     return serve_step
 
@@ -60,6 +61,7 @@ def make_insert_fn(cfg: ModelConfig, block_size: int):
     (pool_cache, prefill_cache, block_ids) -> pool_cache."""
 
     def insert_layer(pool_l, pre_l, block_ids, stacked):
+        # pools are heads-major: (P, K, NB, bs, hd) stacked | (K, NB, bs, hd)
         out = dict(pool_l)
         for src, dst in (("k", "kp"), ("v", "vp")):
             x = pre_l[src]                      # (P, G, S, K, hd) | (G, S, …)
@@ -67,7 +69,12 @@ def make_insert_fn(cfg: ModelConfig, block_size: int):
             S = x.shape[seq_ax]
             xr = x.reshape(*x.shape[:seq_ax], S // block_size, block_size,
                            *x.shape[seq_ax + 1:])
-            idx = (slice(None), block_ids) if stacked else block_ids
+            if stacked:                         # (P, G, nb, bs, K, hd)
+                xr = xr.transpose(0, 4, 1, 2, 3, 5)
+                idx = (slice(None), slice(None), block_ids)
+            else:                               # (G, nb, bs, K, hd)
+                xr = xr.transpose(3, 0, 1, 2, 4)
+                idx = (slice(None), block_ids)
             out[dst] = pool_l[dst].at[idx].set(xr.astype(pool_l[dst].dtype))
         return out
 
@@ -94,14 +101,14 @@ def make_extract_fn(cfg: ModelConfig, block_size: int):
     def extract(pool_cache, block_ids):
         def one(pool_l, stacked):
             nb = block_ids.shape[0]
-            if stacked:
-                k = pool_l["kp"][:, block_ids]   # (P, nb, bs, K, hd)
-                v = pool_l["vp"][:, block_ids]
-                P = k.shape[0]
+            if stacked:                          # pool (P, K, NB, bs, hd)
+                k = pool_l["kp"][:, :, block_ids].transpose(0, 2, 3, 1, 4)
+                v = pool_l["vp"][:, :, block_ids].transpose(0, 2, 3, 1, 4)
+                P = k.shape[0]                   # -> (P, nb, bs, K, hd)
                 return {"k": k.reshape(P, nb * block_size, *k.shape[3:]),
                         "v": v.reshape(P, nb * block_size, *v.shape[3:])}
-            k = pool_l["kp"][block_ids]
-            v = pool_l["vp"][block_ids]
+            k = pool_l["kp"][:, block_ids].transpose(1, 2, 0, 3)
+            v = pool_l["vp"][:, block_ids].transpose(1, 2, 0, 3)
             return {"k": k.reshape(nb * block_size, *k.shape[2:]),
                     "v": v.reshape(nb * block_size, *v.shape[2:])}
 

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import tpu_compiler_params
+from repro.kernels import largest_divisor_block, tpu_compiler_params
 
 _CompilerParams = tpu_compiler_params()
 
@@ -80,8 +80,9 @@ def decode_attention(q, k, v, slot_pos, pos, *,
     Returns (B, K, G, hd)."""
     B, K, G, hd = q.shape
     S = k.shape[2]
-    s_block = min(s_block, S)
-    assert S % s_block == 0, (S, s_block)
+    # Largest valid block <= s_block: min(s_block, S) alone breaks on
+    # non-divisible cache lengths (e.g. S=768 with the default 512).
+    s_block = largest_divisor_block(S, s_block)
     n_s = S // s_block
     scale = 1.0 / math.sqrt(hd)
     kernel = functools.partial(_decode_kernel, scale=scale, window=window,

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for paged single-token GQA decode attention.
+
+This is the *gather semantics* spelled out as plainly as possible: clip the
+block table onto the garbage block, materialize every slot's logical K/V
+view, and mask by absolute position.  The Pallas kernel and the fused jnp
+fallback in ``ops.py`` must reproduce it; the serving runtime's legacy
+gather path (``models/layers.py``) computes the same thing inline.
+
+Validity of logical key index ``t`` for a row at decode position ``pos``:
+``t <= pos``, the covering table entry is allocated (``!= -1``), and
+``t > pos - window`` for sliding-window configs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, kp, vp, block_tbl, pos, *,
+                        window: Optional[int] = None):
+    """q: (B, H, hd); kp, vp: (K, NB, bs, hd) block pools;
+    block_tbl: (B, MB) int32 (-1 = unallocated); pos: (B,) int32.
+    Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    K, _, bs, _ = kp.shape
+    G = H // K
+    MB = block_tbl.shape[1]
+    phys = jnp.maximum(block_tbl, 0)                 # -1 -> garbage block
+    # (K, B, MB, bs, hd) -> (B, MB*bs, K, hd) logical view
+    k = kp[:, phys].transpose(1, 2, 3, 0, 4).reshape(B, MB * bs, K, hd)
+    v = vp[:, phys].transpose(1, 2, 3, 0, 4).reshape(B, MB * bs, K, hd)
+    kpos = jnp.arange(MB * bs)[None, :]              # logical idx == position
+    ok = (kpos <= pos[:, None]) & \
+        (block_tbl[:, kpos[0] // bs] >= 0)
+    if window is not None:
+        ok = ok & (kpos > pos[:, None] - window)
+    qg = q.reshape(B, K, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    s = jnp.where(ok[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", w, v.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)

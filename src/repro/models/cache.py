@@ -68,23 +68,27 @@ GARBAGE_BLOCK = 0
 
 def paged_attn_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
                      dtype) -> Cache:
-    """One attention layer's block pool: {"kp","vp"}: (NB, bs, K, hd)."""
+    """One attention layer's block pool: {"kp","vp"}: (K, NB, bs, hd).
+
+    Heads-major so the paged-attention kernel's per-step tile is one
+    (block_size, hd) slab — contiguous minor dims for the DMA engine."""
     K, hd = cfg.num_kv_heads, cfg.head_dim_
     return {
-        "kp": jnp.zeros((num_blocks, block_size, K, hd), dtype),
-        "vp": jnp.zeros((num_blocks, block_size, K, hd), dtype),
+        "kp": jnp.zeros((K, num_blocks, block_size, hd), dtype),
+        "vp": jnp.zeros((K, num_blocks, block_size, hd), dtype),
     }
 
 
 def paging_unsupported_reason(cfg: ModelConfig) -> Optional[str]:
-    """None if the config can be served by the paged runtime."""
+    """None if the config can be served by the paged runtime.  Sliding-window
+    configs ARE servable: the paged decode masks by window in-kernel (all
+    blocks are retained; out-of-window block *reclamation* is a separate
+    memory optimization, not a correctness requirement)."""
     kinds = set(cfg.pattern) | set(cfg.remainder_layers)
     if kinds != {ATTN}:
         return f"paged serving needs attention-only stacks, got {sorted(kinds)}"
     if cfg.cross_attention or cfg.encoder_layers:
         return "paged serving does not support encoder/cross-attention models"
-    if cfg.sliding_window is not None:
-        return "paged serving does not support native sliding-window configs"
     return None
 
 
@@ -121,11 +125,16 @@ def _stack(trees):
 
 
 def init_cache(cfg: ModelConfig, batch: int, context_len: int,
-               dtype: Optional[Any] = None) -> Cache:
+               dtype: Optional[Any] = None, *,
+               clamp_window: bool = True) -> Cache:
     """Full model cache pytree: stacked per pattern position over periods,
-    plus unrolled tail layers."""
+    plus unrolled tail layers.  ``clamp_window=False`` keeps the physical
+    length at ``context_len`` even for sliding-window configs — the serving
+    prefill needs every position present so it can scatter whole blocks
+    into the paged pool (the decode mask enforces the window instead)."""
     dtype = dtype or cfg.jnp_dtype
-    clen = effective_cache_len(cfg, context_len)
+    clen = effective_cache_len(cfg, context_len) if clamp_window \
+        else context_len
     pat = cfg.pattern
     periods = {}
     for j, kind in enumerate(pat):

@@ -228,17 +228,20 @@ def apply_attention(p: Params, cfg: ModelConfig, x, *, positions,
                     mask_kind: str = "causal", prefix_len: int = 0,
                     window: Optional[int] = None, adapter_idx=None,
                     use_chunked: bool = False, use_rope: bool = True,
-                    block_tbl=None):
+                    block_tbl=None, use_paged_kernel: bool = False):
     """GQA attention with optional KV cache (decode) and cross-attention.
 
     x: (B, T, D). positions: (T,) or (B, T) absolute positions of x tokens.
     cache: {"k","v": (B, S, K, hd), "slot_pos": (S,) int32, "idx": ()} — decode
     writes one token at rolling slot idx % S and attends over the cache.
-    Paged cache (serving): {"kp","vp": (NB, bs, K, hd)} block pools shared by
+    Paged cache (serving): {"kp","vp": (K, NB, bs, hd)} block pools shared by
     all rows, addressed through ``block_tbl`` (B, MB) int32 — each row writes
-    its token at block_tbl[b, pos//bs] offset pos%bs and attends over a
-    gathered (B, MB*bs) view of its own blocks; -1 table entries clip onto
-    the reserved garbage block 0 and are masked out by position.
+    its token at block_tbl[b, pos//bs] offset pos%bs, then attends over its
+    own blocks: with ``use_paged_kernel`` the Pallas paged-attention kernel
+    (or its fused jnp fallback off-TPU) walks the block table in-kernel; the
+    reference path gathers a (B, MB*bs) view instead.  -1 table entries clip
+    onto the reserved garbage block 0 and are masked out by position/table
+    validity.
     kv_x: encoder output for cross-attention (keys/values from it, no cache).
     Returns (out, new_cache).
     """
@@ -266,21 +269,31 @@ def apply_attention(p: Params, cfg: ModelConfig, x, *, positions,
     new_cache = cache
     if cache is not None and "kp" in cache and kv_x is None:
         # Paged decode: per-row single-token write into the block pool, then
-        # a gather-based block-table lookup for the attended K/V view.
+        # attend over the row's blocks (in-kernel table walk or the gather
+        # reference).  Pools are heads-major (K, NB, bs, hd).
         assert T == 1, "paged cache is decode-only (T == 1)"
         assert block_tbl is not None, "paged cache requires block_tbl"
-        bs = cache["kp"].shape[1]
+        bs = cache["kp"].shape[2]
         pos = positions[:, -1]                                   # (B,)
         blk = jnp.take_along_axis(block_tbl, (pos // bs)[:, None],
                                   axis=1)[:, 0]
         blk = jnp.maximum(blk, 0)          # -1 (inactive row) -> garbage blk
         off = pos % bs
-        kp = cache["kp"].at[blk, off].set(k[:, 0].astype(cache["kp"].dtype))
-        vp = cache["vp"].at[blk, off].set(v[:, 0].astype(cache["vp"].dtype))
+        kp = cache["kp"].at[:, blk, off].set(
+            k[:, 0].astype(cache["kp"].dtype).swapaxes(0, 1))
+        vp = cache["vp"].at[:, blk, off].set(
+            v[:, 0].astype(cache["vp"].dtype).swapaxes(0, 1))
         new_cache = {"kp": kp, "vp": vp}
+        if use_paged_kernel:
+            from repro.kernels.paged_attention.ops import paged_decode_gqa
+            out = paged_decode_gqa(q[:, 0], kp, vp, block_tbl, pos,
+                                   window=window)
+            out = dense(out.reshape(B, T, H * hd), p["wo"], lora.get("o"),
+                        scaling=s, adapter_idx=adapter_idx)
+            return out, new_cache
         phys = jnp.maximum(block_tbl, 0)                         # (B, MB)
-        k = kp[phys].reshape(B, -1, K, hd)                       # (B, MB*bs,…)
-        v = vp[phys].reshape(B, -1, K, hd)
+        k = kp[:, phys].transpose(1, 2, 3, 0, 4).reshape(B, -1, K, hd)
+        v = vp[:, phys].transpose(1, 2, 3, 0, 4).reshape(B, -1, K, hd)
         # logical key index == absolute token position; keys past the row's
         # current position (unallocated / garbage-clipped) are masked causally
         k_pos = jnp.broadcast_to(jnp.arange(k.shape[1])[None],

@@ -173,7 +173,7 @@ def _cross_attention(lp: Params, cfg: ModelConfig, h, enc_out, cache):
 def _apply_layer(kind: str, lp: Params, cfg: ModelConfig, x, *, positions,
                  cache, mask_kind: str, prefix_len: int, adapter_idx,
                  enc_out, use_chunked: bool, fill_cache: bool,
-                 block_tbl=None):
+                 block_tbl=None, use_paged_kernel: bool = False):
     """One residual block. Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     h = apply_norm(x, lp["norm1"], cfg.norm_type)
@@ -187,7 +187,8 @@ def _apply_layer(kind: str, lp: Params, cfg: ModelConfig, x, *, positions,
             lp["attn"], cfg, h, positions=positions, cache=attn_cache_in,
             mask_kind=mask_kind, prefix_len=prefix_len,
             window=cfg.sliding_window, adapter_idx=adapter_idx,
-            use_chunked=use_chunked, use_rope=True, block_tbl=block_tbl)
+            use_chunked=use_chunked, use_rope=True, block_tbl=block_tbl,
+            use_paged_kernel=use_paged_kernel)
         if ring_overflow:
             # SWA prefill longer than the window: keep only the last Tc K/V.
             from repro.models.layers import dense, rope
@@ -275,7 +276,7 @@ def encode(params: Params, cfg: ModelConfig, frame_embeds) -> jnp.ndarray:
 # -------------------------------------------------------------------- forward
 def _run_stack(params, cfg: ModelConfig, x, *, positions, cache, mask_kind,
                prefix_len, adapter_idx, enc_out, use_chunked, fill_cache,
-               remat: bool, block_tbl=None):
+               remat: bool, block_tbl=None, use_paged_kernel: bool = False):
     pat = cfg.pattern
     aux_total = jnp.zeros((), jnp.float32)
 
@@ -290,7 +291,7 @@ def _run_stack(params, cfg: ModelConfig, x, *, positions, cache, mask_kind,
                 mask_kind=mask_kind, prefix_len=prefix_len,
                 adapter_idx=adapter_idx, enc_out=enc_out,
                 use_chunked=use_chunked, fill_cache=fill_cache,
-                block_tbl=block_tbl)
+                block_tbl=block_tbl, use_paged_kernel=use_paged_kernel)
             new_cs[f"p{j}"] = nc
             aux = aux + a
         return (x, aux), new_cs
@@ -315,7 +316,7 @@ def _run_stack(params, cfg: ModelConfig, x, *, positions, cache, mask_kind,
             mask_kind=mask_kind, prefix_len=prefix_len,
             adapter_idx=adapter_idx, enc_out=enc_out,
             use_chunked=use_chunked, fill_cache=fill_cache,
-            block_tbl=block_tbl)
+            block_tbl=block_tbl, use_paged_kernel=use_paged_kernel)
         new_tail.append(nc)
         aux_total = aux_total + a
 
@@ -382,11 +383,15 @@ def forward(params: Params, cfg: ModelConfig, tokens, *,
 
 
 def decode_step(params: Params, cfg: ModelConfig, token, cache, pos, *,
-                adapter_idx=None, block_tbl=None) -> Tuple[jnp.ndarray, Dict]:
+                adapter_idx=None, block_tbl=None,
+                use_paged_kernel: bool = False
+                ) -> Tuple[jnp.ndarray, Dict]:
     """ONE decode step. token: (B,) int32; pos: () int32 absolute position,
     or (B,) int32 per-row positions (continuous batching: each slot decodes
     at its own depth); cache: filled cache pytree — contiguous ring caches,
     or a paged block-pool cache addressed via block_tbl (B, MB) int32.
+    ``use_paged_kernel`` routes paged attention through the in-kernel
+    block-table walk instead of the gather reference.
     Returns (logits (B, V), new_cache)."""
     B = token.shape[0]
     x = _constrain(jnp.take(params["embed"], token[:, None],
@@ -400,7 +405,7 @@ def decode_step(params: Params, cfg: ModelConfig, token, cache, pos, *,
         params, cfg, x, positions=positions, cache=cache, mask_kind="causal",
         prefix_len=0, adapter_idx=adapter_idx, enc_out=None,
         use_chunked=False, fill_cache=False, remat=False,
-        block_tbl=block_tbl)
+        block_tbl=block_tbl, use_paged_kernel=use_paged_kernel)
     return _logits(params, cfg, x)[:, 0], new_cache
 
 

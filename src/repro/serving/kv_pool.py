@@ -59,10 +59,17 @@ class BlockPool:
         return ids
 
     def free(self, ids: List[int]) -> None:
-        """Return blocks.  Double-free / foreign ids are bugs, not warnings."""
+        """Return blocks.  Double-free / foreign ids are bugs, not warnings.
+
+        Atomic: the whole id list is validated before any mutation, so a
+        caller that catches the KeyError observes an unchanged pool (a
+        partial free would leak the valid prefix AND corrupt accounting)."""
+        bad = [b for b in ids if b not in self._in_use]
+        if bad:
+            raise KeyError(f"free of unallocated block(s) {bad}")
+        if len(set(ids)) != len(ids):
+            raise KeyError(f"duplicate block id in free list {ids}")
         for b in ids:
-            if b not in self._in_use:
-                raise KeyError(f"free of unallocated block {b}")
             self._in_use.discard(b)
             self._free.append(b)
 

@@ -144,6 +144,8 @@ def replay_trace(runtime: ContinuousRuntime, workload: Sequence[Dict],
             for st in res.finished:          # output_len == 1 / instant EOS
                 finish(st, now)
             for sid in res.slot_ids:
+                if sid < 0:                  # finished at prefill, unbound
+                    continue
                 st = runtime.slots.states[sid]
                 if st is not None:
                     live[sid] = st.req
@@ -164,14 +166,25 @@ def replay_trace(runtime: ContinuousRuntime, workload: Sequence[Dict],
             continue
         chunk_t0 = now
         now += dres.dt
+        finishing = {st.sid for st in dres.finished}
         for sid, toks in dres.emitted.items():
             st = runtime.slots.states[sid]
             req = st.req if st is not None else live.get(sid)
-            if req is None:
+            if req is None or not toks:
                 continue
-            per_tok = dres.dt / max(scfg.decode_chunk, 1)
-            token_times.setdefault(req.req_id, []).extend(
-                chunk_t0 + (i + 1) * per_tok for i in range(len(toks)))
+            if sid in finishing:
+                # the chunk was (possibly) clipped by budget/EOS, but the
+                # device still ran the full chunk: the last accepted token
+                # lands at chunk END (done must not predate its dispatch);
+                # interior tokens interpolate evenly inside the chunk
+                times = [chunk_t0 + dres.dt * (i + 1) / len(toks)
+                         for i in range(len(toks))]
+            else:
+                # unclipped chunk: len(toks) == decode_chunk, uniform spread
+                per_tok = dres.dt / max(scfg.decode_chunk, 1)
+                times = [chunk_t0 + (i + 1) * per_tok
+                         for i in range(len(toks))]
+            token_times.setdefault(req.req_id, []).extend(times)
         for sid in dres.stalled:
             st = runtime.slots.states[sid]
             if st is not None:

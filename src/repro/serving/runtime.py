@@ -54,11 +54,15 @@ class ServingConfig:
     prefill_group: int = 2           # rows per bucketed prefill dispatch
     decode_chunk: int = 4            # tokens per jitted decode dispatch
     eos_id: Optional[int] = None
+    use_kernel: bool = True          # in-kernel block-table walk for decode
+    #   attention (Pallas on TPU, fused jnp block walk elsewhere); False =
+    #   the gather-based reference path
 
 
 @dataclasses.dataclass
 class AdmitResult:
-    slot_ids: List[int]
+    slot_ids: List[int]              # bound slot per item; -1 = finished at
+    #   prefill (output_len == 1 / instant EOS), never bound to a slot
     first_tokens: List[int]
     finished: List[SlotState]        # output_len == 1 completes at prefill
     dt: float
@@ -96,7 +100,8 @@ class ContinuousRuntime:
             def body(carry, _):
                 tok, cache, pos = carry
                 logits, cache = serve(params, tok, cache, pos,
-                                      adapter_idx=ai, block_tbl=tbl)
+                                      adapter_idx=ai, block_tbl=tbl,
+                                      use_paged_kernel=scfg.use_kernel)
                 nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
                 return (nxt, cache, pos + 1), nxt
 
@@ -109,8 +114,11 @@ class ContinuousRuntime:
         def prefill_insert(params, tokens, last_pos, ai, pool_cache, ids):
             """Fused join: bucketed group prefill + slot-wise block scatter
             in ONE dispatch (admission happens between decode chunks, so its
-            dispatch overhead is pure decode stall)."""
-            cache = tf.init_cache(cfg, tokens.shape[0], tokens.shape[1])
+            dispatch overhead is pure decode stall).  clamp_window=False:
+            sliding-window configs must keep every bucket position so whole
+            blocks can be scattered; the decode path masks the window."""
+            cache = tf.init_cache(cfg, tokens.shape[0], tokens.shape[1],
+                                  clamp_window=False)
             logits, cache = prefill(params, tokens, cache,
                                     adapter_idx=ai, last_pos=last_pos)
             first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -197,14 +205,18 @@ class ContinuousRuntime:
                            prompt_len=len(prompt),
                            budget=max(req.output_len, 1), pos=len(prompt),
                            blocks=allocs[i], last_token=int(first[i]))
-            slot_ids.append(sid)
             first_tokens.append(int(first[i]))
             done = st.budget == 1 or (scfg.eos_id is not None
                                       and int(first[i]) == scfg.eos_id)
             if done:
+                # finished at prefill: never bound, so free[i] would be a
+                # lie — report -1 (the slot stays free for other requests)
+                st.sid = -1
+                slot_ids.append(-1)
                 self.pool.free(st.blocks)
                 finished.append(st)
             else:
+                slot_ids.append(sid)
                 self.slots.bind(st, int(first[i]))
         return AdmitResult(slot_ids, first_tokens, finished, dt)
 

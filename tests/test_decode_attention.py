@@ -68,6 +68,28 @@ def test_decode_attention_property(S, K, G, win, seed):
                                atol=3e-5, rtol=3e-5)
 
 
+@pytest.mark.parametrize("S,sb", [(768, 512), (96, 64), (7, 4)])
+def test_non_divisible_cache_length(S, sb):
+    """Direct kernel calls with S not divisible by s_block used to trip
+    `assert S % s_block == 0` (e.g. S=768 with the default 512); the kernel
+    now picks the largest valid block <= s_block instead."""
+    from repro.kernels.decode_attention.decode_attn import decode_attention
+    B, K, G, hd = 1, 2, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(S), 3)
+    q = jax.random.normal(ks[0], (B, K, G, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, K, S, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, K, S, hd), jnp.float32)
+    slot_pos = jnp.arange(S, dtype=jnp.int32)
+    pos = jnp.array(S - 1, jnp.int32)
+    out = decode_attention(q, k, v, slot_pos, pos, s_block=sb,
+                           interpret=True)
+    ref = decode_attention_ref(
+        q.reshape(B, K * G, hd), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), slot_pos, pos)
+    np.testing.assert_allclose(np.asarray(out).reshape(B, K * G, hd),
+                               np.asarray(ref), atol=3e-5, rtol=3e-5)
+
+
 def test_matches_model_cache_semantics():
     """Kernel semantics == the model's dense decode path on a real cache."""
     from repro.models.config import ModelConfig

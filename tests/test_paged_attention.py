@@ -1,0 +1,150 @@
+"""Paged-attention decode kernel vs oracle: in-kernel block-table walk
+(interpret=True on CPU), fused jnp fallback, mixed live/stalled/inactive
+rows, ragged per-row positions, window masking, garbage-block isolation,
+and paged-kernel == gather == contiguous through the real serve step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import get_kernel
+from repro.kernels.paged_attention.ops import (_paged_decode_jnp,
+                                               paged_decode_gqa)
+from repro.kernels.paged_attention.paged_attn import (largest_divisor_block,
+                                                      paged_decode_attention)
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+def _mk(B, K, G, hd, bs, MB, NB, seed=0, dtype=jnp.float32, *,
+        inactive_rows=(), stalled_rows=()):
+    """Random pools + a mixed-state block table.
+
+    Active rows get a random number of allocated blocks and a ragged
+    position inside their last block; ``inactive_rows`` are all -1 (free
+    decode slots); ``stalled_rows`` sit at pos 0 with one block (a slot
+    replaying its pending token)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, K * G, hd), jnp.float32).astype(dtype)
+    kp = jax.random.normal(ks[1], (K, NB, bs, hd), jnp.float32).astype(dtype)
+    vp = jax.random.normal(ks[2], (K, NB, bs, hd), jnp.float32).astype(dtype)
+    rng = np.random.default_rng(seed)
+    tbl = np.full((B, MB), -1, np.int32)
+    pos = np.zeros((B,), np.int32)
+    for b in range(B):
+        if b in inactive_rows:
+            continue
+        nb = 1 if b in stalled_rows else int(rng.integers(1, MB + 1))
+        tbl[b, :nb] = rng.choice(np.arange(1, NB), size=nb, replace=False)
+        pos[b] = 0 if b in stalled_rows else \
+            int(rng.integers((nb - 1) * bs, nb * bs))
+    return q, kp, vp, jnp.asarray(tbl), jnp.asarray(pos)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,K,G,hd,bs,MB,NB,win", [
+    (4, 2, 4, 64, 16, 8, 32, None),
+    (3, 2, 3, 32, 8, 6, 24, 4),        # sliding window
+    (2, 4, 1, 64, 16, 4, 16, None),    # MHA (G=1)
+    (2, 1, 2, 16, 48, 4, 16, None),    # bs=48 exercises sub-block split
+])
+def test_kernel_matches_oracle_interpret(B, K, G, hd, bs, MB, NB, win,
+                                         dtype):
+    q, kp, vp, tbl, pos = _mk(B, K, G, hd, bs, MB, NB, seed=B + bs,
+                              dtype=dtype)
+    ref = paged_attention_ref(q, kp, vp, tbl, pos, window=win)
+    out = paged_decode_gqa(q, kp, vp, tbl, pos, window=win, s_block=32,
+                           interpret=True)
+    tol = 3e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_fused_jnp_matches_oracle():
+    """The off-TPU fast path (what the serving runtime runs on CPU)."""
+    for win in (None, 6):
+        q, kp, vp, tbl, pos = _mk(5, 2, 2, 32, 8, 8, 32, seed=11)
+        ref = paged_attention_ref(q, kp, vp, tbl, pos, window=win)
+        out = _paged_decode_jnp(q, kp, vp, tbl, pos, window=win)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=3e-5, rtol=3e-5)
+
+
+def test_mixed_live_stalled_inactive_rows():
+    """Inactive (-1 table) and stalled (pos=0) rows must not perturb live
+    rows, and every row's output must stay finite (branch-free batch)."""
+    B = 6
+    q, kp, vp, tbl, pos = _mk(B, 2, 2, 32, 8, 6, 32, seed=3,
+                              inactive_rows=(1, 4), stalled_rows=(2,))
+    ref = paged_attention_ref(q, kp, vp, tbl, pos)
+    out = paged_decode_gqa(q, kp, vp, tbl, pos, interpret=True)
+    live = [b for b in range(B) if b not in (1, 4)]
+    np.testing.assert_allclose(np.asarray(out)[live], np.asarray(ref)[live],
+                               atol=3e-5, rtol=3e-5)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_garbage_block_isolation():
+    """Scribbling over the garbage block (where -1 entries clip) and over
+    unreferenced pool blocks must not change any live row's output."""
+    q, kp, vp, tbl, pos = _mk(4, 2, 2, 32, 8, 6, 32, seed=7,
+                              inactive_rows=(3,))
+    base = paged_decode_gqa(q, kp, vp, tbl, pos, interpret=True)
+    used = set(np.asarray(tbl)[np.asarray(tbl) >= 0].tolist())
+    unused = [i for i in range(32) if i not in used and i != 0]
+    kp2 = kp.at[:, [0] + unused[:3]].set(99.0)
+    vp2 = vp.at[:, [0] + unused[:3]].set(-99.0)
+    out = paged_decode_gqa(q, kp2, vp2, tbl, pos, interpret=True)
+    live = [0, 1, 2]
+    np.testing.assert_allclose(np.asarray(out)[live],
+                               np.asarray(base)[live], atol=1e-6)
+
+
+def test_ragged_positions_row_equivalence():
+    """Per-row positions must behave exactly like B independent single-row
+    calls (the property scalar-``pos`` decode_attention cannot express)."""
+    B = 4
+    q, kp, vp, tbl, pos = _mk(B, 2, 2, 32, 8, 6, 32, seed=13)
+    out = paged_decode_gqa(q, kp, vp, tbl, pos, interpret=True)
+    for b in range(B):
+        row = paged_decode_gqa(q[b:b + 1], kp, vp, tbl[b:b + 1],
+                               pos[b:b + 1], interpret=True)
+        np.testing.assert_allclose(np.asarray(out)[b], np.asarray(row)[0],
+                                   atol=3e-5, rtol=3e-5)
+
+
+def test_sub_block_rule():
+    """Same largest-divisor rule as the decode_attention non-divisible fix."""
+    assert largest_divisor_block(768, 512) == 384
+    assert largest_divisor_block(96, 64) == 48
+    assert largest_divisor_block(16, 512) == 16
+    assert largest_divisor_block(48, 32) == 24
+    assert largest_divisor_block(7, 4) == 1
+    # splitting must not change results: bs=48 with s_block 16 -> 3 tiles
+    q, kp, vp, tbl, pos = _mk(2, 1, 2, 16, 48, 4, 16, seed=5)
+    whole = paged_decode_attention(q.reshape(2, 1, 2, 16), kp, vp, tbl, pos,
+                                   s_block=48, interpret=True)
+    split = paged_decode_attention(q.reshape(2, 1, 2, 16), kp, vp, tbl, pos,
+                                   s_block=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(whole), np.asarray(split),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_ops_dispatch_and_registry():
+    q, kp, vp, tbl, pos = _mk(3, 2, 2, 32, 8, 4, 16, seed=9)
+    ref = paged_attention_ref(q, kp, vp, tbl, pos)
+    # use_kernel=False IS the reference
+    np.testing.assert_array_equal(
+        np.asarray(paged_decode_gqa(q, kp, vp, tbl, pos, use_kernel=False)),
+        np.asarray(ref))
+    # auto dispatch (fused jnp on CPU / Pallas on TPU) agrees with it
+    out = paged_decode_gqa(q, kp, vp, tbl, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-5, rtol=3e-5)
+    # registry resolves to the same entry point
+    fn = get_kernel("paged_attention")
+    np.testing.assert_array_equal(
+        np.asarray(fn(q, kp, vp, tbl, pos, use_kernel=False)),
+        np.asarray(ref))
+    with pytest.raises(KeyError):
+        get_kernel("nonexistent_kernel")

@@ -47,12 +47,32 @@ def test_blocks_for_tokens():
     assert blocks_for_tokens(9, 8) == 2
 
 
+def test_block_pool_free_is_atomic():
+    """A rejected free (foreign/double-freed/duplicate id) must leave the
+    pool exactly as it was — no partial mutation for callers that catch."""
+    pool = BlockPool(num_blocks=8, block_size=4)
+    a = pool.alloc(3)
+    snap = (list(pool._free), set(pool._in_use))
+    with pytest.raises(KeyError):
+        pool.free([a[0], a[1], 99])       # valid prefix + foreign id
+    assert (list(pool._free), set(pool._in_use)) == snap
+    with pytest.raises(KeyError):
+        pool.free([a[0], a[0]])           # duplicate in one call
+    assert (list(pool._free), set(pool._in_use)) == snap
+    pool.free(a)                          # the valid free still works
+    assert pool.in_use == 0 and pool.available == 7
+
+
 def test_paging_unsupported_configs_rejected():
     cfg = get_smoke("recurrentgemma_9b")   # rec mixers in the pattern
     assert paging_unsupported_reason(cfg) is not None
     with pytest.raises(ValueError):
         init_paged_cache(cfg, 8, 4)
     assert paging_unsupported_reason(get_smoke("llama2_7b")) is None
+    # sliding-window configs are servable: the paged decode masks the
+    # window in-kernel (block reclamation is an optimization, not a gate)
+    swa = get_smoke("llama2_7b").with_(sliding_window=8)
+    assert paging_unsupported_reason(swa) is None
 
 
 # ---------------------------------------------------- paged == contiguous
@@ -102,6 +122,58 @@ def test_paged_decode_matches_contiguous(small_model):
         np.testing.assert_allclose(ref[s + 1], lg, atol=1e-5)
         tok2 = jnp.argmax(lg, -1).astype(jnp.int32)
         pos = pos + 1
+
+
+def test_paged_kernel_matches_gather_and_contiguous(small_model):
+    """In-kernel block-table walk == gather reference == contiguous ring
+    decode, across ragged per-row positions and an inactive (-1) row."""
+    cfg, params = small_model
+    B, T, steps, bs = 2, 8, 4, 4
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, T), 0,
+                              cfg.vocab_size)
+    ai = jnp.array([1, 0], jnp.int32)
+    prefill, serve = make_prefill_step(cfg), make_serve_step(cfg)
+
+    cache = tf.init_cache(cfg, B, 32)
+    logits, cache = prefill(params, toks, cache, adapter_idx=ai)
+    ref = [logits]
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for s in range(steps):
+        lg, cache = serve(params, tok, cache, jnp.array(T + s, jnp.int32),
+                          adapter_idx=ai)
+        ref.append(lg)
+        tok = jnp.argmax(lg, -1).astype(jnp.int32)
+
+    def paged_run(use_kernel):
+        pool = init_paged_cache(cfg, 16, bs)
+        pre = tf.init_cache(cfg, B, T)
+        lg2, pre = prefill(params, toks, pre, adapter_idx=ai,
+                           last_pos=jnp.full((B,), T - 1, jnp.int32))
+        pool = jax.jit(make_insert_fn(cfg, bs))(
+            pool, pre, jnp.array([[1, 2], [3, 4]], jnp.int32))
+        tbl = np.full((B + 1, 8), -1, np.int32)   # extra row: inactive slot
+        tbl[0, :4] = [1, 2, 5, 7]
+        tbl[1, :4] = [3, 4, 6, 8]
+        tbl = jnp.asarray(tbl)
+        tok2 = jnp.argmax(lg2, -1).astype(jnp.int32)
+        tok3 = jnp.concatenate([tok2, jnp.zeros((1,), jnp.int32)])
+        ai3 = jnp.concatenate([ai, jnp.zeros((1,), jnp.int32)])
+        pos = jnp.array([T, T, 0], jnp.int32)
+        outs = []
+        for s in range(steps):
+            lg, pool = serve(params, tok3, pool, pos, adapter_idx=ai3,
+                             block_tbl=tbl, use_paged_kernel=use_kernel)
+            outs.append(lg[:B])
+            tok3 = jnp.argmax(lg, -1).astype(jnp.int32)
+            # live rows advance at their own depth; inactive row stays put
+            pos = pos + jnp.array([1, 1, 0], jnp.int32)
+        return outs
+
+    gather, kernel = paged_run(False), paged_run(True)
+    for s in range(steps):
+        np.testing.assert_allclose(ref[s + 1], gather[s], atol=1e-5)
+        np.testing.assert_allclose(ref[s + 1], kernel[s], atol=1e-5)
+        np.testing.assert_allclose(gather[s], kernel[s], atol=1e-5)
 
 
 def test_insert_extract_roundtrip(small_model):
@@ -236,6 +308,128 @@ def test_stall_does_not_corrupt_output(small_model):
     assert tight_stalls > 0, "scenario no longer exercises the stall path"
     assert ample_stalls == 0
     assert tight == ample, "stall chunk leaked state into the output"
+
+
+def test_admit_prefill_finish_reports_unbound_slot(small_model):
+    """A request that finishes at prefill (output_len == 1) is never bound
+    to a slot; AdmitResult must say -1, not a phantom free slot id."""
+    cfg, params = small_model
+    rt = _mk_runtime(cfg, params)
+    rng = np.random.default_rng(1)
+    reqs = [Request(req_id=i, fn_id="fn0", arrival=0.0, prompt_len=12,
+                    output_len=o, slo_ttft=10.0)
+            for i, o in enumerate((1, 6))]
+    res = rt.try_admit([(r, rng.integers(0, 512, 12, dtype=np.int32), 0)
+                        for r in reqs])
+    assert res.slot_ids[0] == -1          # finished at prefill, unbound
+    assert res.slot_ids[1] >= 0           # the live one got a real slot
+    assert [st.req.req_id for st in res.finished] == [0]
+    assert res.finished[0].sid == -1
+    assert rt.slots.num_active == 1
+    assert rt.slots.states[res.slot_ids[1]].req.req_id == 1
+    # drain; everything reclaimed
+    for _ in range(6):
+        if rt.decode() is None:
+            break
+    assert rt.slots.num_active == 0 and rt.pool.in_use == 0
+
+
+def test_replay_finish_never_predates_dispatch(small_model):
+    """Chunks clipped by budget/EOS: the finishing token is stamped at the
+    end of the decode dispatch that produced it, so ``done`` can never
+    precede the dispatch and TPOT can never go negative."""
+    cfg, params = small_model
+    rt = _mk_runtime(cfg, params)
+    # output 6 with decode_chunk 4: the finishing chunk accepts 2 of 4
+    specs = [TraceSpec("fn0", "normal", 2.0, 4.0, prompt_len=12,
+                       output_len=6, slo_ttft=30.0)]
+    wl = make_workload(specs, seed=5)
+    assert any(w["output_len"] % rt.scfg.decode_chunk for w in wl)
+    res, events = replay_trace(rt, wl, {"fn0": 0}, slo_abandon=False,
+                               collect_events=True)
+    fin = {e.req_id: e for e in events if e.kind == "finish"}
+    served = [r for r in res.requests if r.first_token >= 0]
+    assert served and fin
+    for r in served:
+        ev = fin[r.req_id]
+        # the finish event is logged at the end of the producing dispatch
+        assert r.done >= ev.t - 1e-9, (r.req_id, r.done, ev.t)
+        assert abs(r.done - ev.t) < 1e-9
+        assert r.done >= r.first_token
+        if r.output_len > 1:
+            assert r.done > r.first_token   # TPOT strictly positive
+
+
+def test_sliding_window_served_end_to_end(small_model):
+    """A sliding-window config round-trips through the paged runtime with
+    the in-kernel window mask, and matches the gather reference path."""
+    cfg, params = small_model
+    swa = cfg.with_(sliding_window=8)
+
+    def run(use_kernel):
+        scfg = ServingConfig(num_slots=4, block_size=8, num_blocks=32,
+                             max_blocks_per_slot=6, prefill_buckets=(16,),
+                             prefill_group=2, decode_chunk=4,
+                             use_kernel=use_kernel)
+        rt = ContinuousRuntime(swa, params, scfg)
+        specs = [TraceSpec("fn0", "bursty", 2.0, 4.0, prompt_len=12,
+                           output_len=8, slo_ttft=30.0)]
+        wl = make_workload(specs, seed=5)
+        res, _ = replay_trace(rt, wl, {"fn0": 0}, slo_abandon=False)
+        assert rt.slots.num_active == 0 and rt.pool.in_use == 0
+        assert rt.decode_compiles() in (1, -1)
+        served = [r for r in res.requests if r.first_token >= 0]
+        assert served, "sliding-window trace served nothing"
+        return res
+
+    run(True)
+    run(False)
+
+
+def test_sliding_window_paged_matches_contiguous(small_model):
+    """Windowed paged decode (all blocks retained, window masked in-kernel)
+    == the contiguous ring cache that physically evicts old positions."""
+    cfg, params = small_model
+    swa = cfg.with_(sliding_window=8)
+    B, T, steps, bs = 2, 8, 6, 4
+    toks = jax.random.randint(jax.random.PRNGKey(9), (B, T), 0,
+                              swa.vocab_size)
+    ai = jnp.array([0, 2], jnp.int32)
+    prefill, serve = make_prefill_step(swa), make_serve_step(swa)
+
+    # contiguous: ring buffer of window length (the SWA memory win)
+    cache = tf.init_cache(swa, B, 32)
+    logits, cache = prefill(params, toks, cache, adapter_idx=ai)
+    ref = [logits]
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for s in range(steps):
+        lg, cache = serve(params, tok, cache, jnp.array(T + s, jnp.int32),
+                          adapter_idx=ai)
+        ref.append(lg)
+        tok = jnp.argmax(lg, -1).astype(jnp.int32)
+
+    for use_kernel in (False, True):
+        pool = init_paged_cache(swa, 16, bs)
+        pre = tf.init_cache(swa, B, T, clamp_window=False)
+        lg2, pre = prefill(params, toks, pre, adapter_idx=ai,
+                           last_pos=jnp.full((B,), T - 1, jnp.int32))
+        np.testing.assert_allclose(ref[0], lg2, atol=1e-5)
+        pool = jax.jit(make_insert_fn(swa, bs))(
+            pool, pre, jnp.array([[1, 2], [3, 4]], jnp.int32))
+        tbl = np.full((B, 8), -1, np.int32)
+        tbl[0, :4] = [1, 2, 5, 7]
+        tbl[1, :4] = [3, 4, 6, 8]
+        tbl = jnp.asarray(tbl)
+        tok2 = jnp.argmax(lg2, -1).astype(jnp.int32)
+        pos = jnp.full((B,), T, jnp.int32)
+        for s in range(steps):
+            lg, pool = serve(params, tok2, pool, pos, adapter_idx=ai,
+                             block_tbl=tbl, use_paged_kernel=use_kernel)
+            np.testing.assert_allclose(ref[s + 1], lg, atol=1e-5,
+                                       err_msg=f"step {s} kernel="
+                                               f"{use_kernel}")
+            tok2 = jnp.argmax(lg, -1).astype(jnp.int32)
+            pos = pos + 1
 
 
 def test_pool_exhaustion_progress(small_model):
