@@ -26,7 +26,7 @@ import dataclasses
 import functools
 import statistics
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -110,9 +110,10 @@ def bytes_moved(s: Shape, itemsize: int = 4) -> Dict[str, float]:
     }
 
 
-def bench_ops(iters: int, repeats: int) -> List[Dict]:
+def bench_ops(iters: int, repeats: int,
+              shapes: Sequence[Shape] = SHAPES) -> List[Dict]:
     rows = []
-    for s in SHAPES:
+    for s in shapes:
         args = _mk_inputs(s)
         gather = jax.jit(paged_attention_ref)
         kernel = jax.jit(functools.partial(paged_decode_gqa,
@@ -180,18 +181,22 @@ def bench_serving(rate: float, duration: float, seed: int,
 
 
 def run(iters: int = 30, repeats: int = 5, rate: float = 4.0,
-        duration: float = 3.0, seed: int = 7) -> Dict:
+        duration: float = 3.0, seed: int = 7, quick: bool = False) -> Dict:
     backend = jax.default_backend()
     impl = "pallas in-kernel walk" if backend == "tpu" \
         else "fused jnp block walk (pallas interpret reserved for tests)"
-    print(f"backend: {backend} — in-kernel path = {impl}\n")
+    print(f"backend: {backend} — in-kernel path = {impl}"
+          + (" [--quick: tiny shapes, perf assertion off]" if quick else "")
+          + "\n")
+    shapes = [s for s in SHAPES if s.label == "smoke-cfg"] if quick \
+        else SHAPES
 
     print("== attention-op decode step: gather path vs in-kernel walk ==")
     hdr = (f"{'shape':20s} {'B':>3s} {'S':>5s} {'gather ms':>10s} "
            f"{'kernel ms':>10s} {'speedup':>8s} {'tok/s (kernel)':>14s} "
            f"{'bytes model':>11s}")
     print(hdr + "\n" + "-" * len(hdr))
-    rows = bench_ops(iters, repeats)
+    rows = bench_ops(iters, repeats, shapes)
     for r in rows:
         s = r["shape"]
         print(f"{s.label:20s} {s.B:3d} {s.MB * s.bs:5d} "
@@ -202,9 +207,15 @@ def run(iters: int = 30, repeats: int = 5, rate: float = 4.0,
     worst = min(asserted, key=lambda r: r["speedup"])
     print(f"\nworst asserted speedup: {worst['speedup']:.2f}x "
           f"({worst['shape'].label})")
-    assert worst["speedup"] >= 1.0, \
-        f"in-kernel path lost to the gather path at {worst['shape'].label}" \
-        f" ({worst['speedup']:.2f}x)"
+    if quick:
+        # CI smoke guards against script rot (imports, shapes, the e2e
+        # correctness/compile assertions below), not steady-state perf —
+        # 2 iters on a shared runner is noise, so the >= 1x gate is off
+        print("(--quick: speedup assertion skipped)")
+    else:
+        assert worst["speedup"] >= 1.0, \
+            f"in-kernel path lost to the gather path at " \
+            f"{worst['shape'].label} ({worst['speedup']:.2f}x)"
 
     print("\n== end-to-end paged serving (replay_trace) ==")
     e2e = bench_serving(rate, duration, seed)
@@ -233,6 +244,14 @@ if __name__ == "__main__":
     ap.add_argument("--rate", type=float, default=4.0)
     ap.add_argument("--duration", type=float, default=3.0)
     ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny shapes + short trace for CI smoke; keeps "
+                         "the correctness/compile assertions, skips the "
+                         "perf one")
     a = ap.parse_args()
-    run(iters=a.iters, repeats=a.repeats, rate=a.rate, duration=a.duration,
-        seed=a.seed)
+    if a.quick:
+        run(iters=2, repeats=2, rate=3.0, duration=1.0, seed=a.seed,
+            quick=True)
+    else:
+        run(iters=a.iters, repeats=a.repeats, rate=a.rate,
+            duration=a.duration, seed=a.seed)

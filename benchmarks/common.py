@@ -9,7 +9,6 @@ import time
 from typing import Dict, List, Optional, Tuple
 
 from repro.configs import get_config
-from repro.models.config import ModelConfig
 from repro.serverless import baselines as B
 from repro.serverless.cluster import Cluster
 from repro.serverless.latency import SLICE_HW

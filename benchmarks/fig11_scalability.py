@@ -4,8 +4,8 @@ LoRA converts added GPU into lower latency (strong) and holds E2E flat
 (weak)."""
 from __future__ import annotations
 
-from benchmarks.common import (SERVERLESS_POLICIES, csv_row, paper_functions,
-                               paper_workload, run_policy)
+from benchmarks.common import (SERVERLESS_POLICIES, csv_row, paper_workload,
+                               run_policy)
 
 
 def run(duration: float = 1200.0):

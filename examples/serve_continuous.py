@@ -1,14 +1,18 @@
 """Continuous-batching serving demo: a bursty 3-adapter trace replayed
 through the REAL paged multi-LoRA engine.  Requests join free decode slots
 mid-flight (bucketed group prefill + slot-wise KV insert into pool blocks)
-and leave on completion (blocks return to the free list) — the serving-side
-realization of the paper's §4.2 batching + §4.4 unmerged multi-LoRA engine.
+and leave on completion (block refcounts drop; the last holder frees) —
+the serving-side realization of the paper's §4.2 batching + §4.4 unmerged
+multi-LoRA engine.  Each function's requests share a system prompt, so
+admissions map already-resident prefix blocks instead of re-inserting them
+(--shared-prefix 0 to disable).
 
 Run: PYTHONPATH=src python examples/serve_continuous.py [--rate 2.0]
 """
 import argparse
 
 import jax
+import numpy as np
 
 from repro.configs import get_smoke
 from repro.models import transformer as tf
@@ -28,7 +32,12 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--events", type=int, default=24,
                     help="how many join/leave events to print")
+    ap.add_argument("--shared-prefix", type=int, default=16,
+                    help="per-function system-prompt tokens shared by "
+                         "every request (0 = unique random prompts)")
     args = ap.parse_args()
+    if args.shared_prefix >= args.prompt_len:
+        raise SystemExit("--shared-prefix must be < --prompt-len")
 
     cfg = get_smoke("llama2_7b").with_(name="serve-continuous",
                                        dtype="float32")
@@ -47,10 +56,22 @@ def main():
     wl = make_workload(specs, seed=args.seed)
     fn_adapter = {f"fn{a}": a for a in range(args.adapters)}
     print(f"trace: {len(wl)} requests over {args.duration}s, "
-          f"{args.adapters} bursty adapter functions")
+          f"{args.adapters} bursty adapter functions, "
+          f"{args.shared_prefix}-token shared system prompt per function")
+
+    prompts = None
+    if args.shared_prefix:
+        rng = np.random.default_rng(args.seed)
+        sys_p = {fn: rng.integers(0, cfg.vocab_size, args.shared_prefix,
+                                  dtype=np.int32) for fn in fn_adapter}
+        prompts = {w["req_id"]: np.concatenate(
+            [sys_p[w["fn_id"]],
+             rng.integers(0, cfg.vocab_size,
+                          w["prompt_len"] - args.shared_prefix,
+                          dtype=np.int32)]) for w in wl}
 
     res, events = replay_trace(rt, wl, fn_adapter, seed=args.seed,
-                               collect_events=True)
+                               collect_events=True, prompts=prompts)
 
     print(f"\nfirst {args.events} runtime events "
           f"(virtual clock — measured device time):")
@@ -70,7 +91,15 @@ def main():
           f"throughput {toks / horizon:7.1f} tok/s (virtual)")
     print(f"SLO violations {res.slo_violation_rate * 100:.1f}%")
     print(f"pool: {rt.pool.num_blocks} blocks x {rt.pool.block_size} tokens, "
-          f"in use after drain: {rt.pool.in_use} (must be 0)")
+          f"in use after drain: {rt.pool.in_use} (must be 0), "
+          f"{rt.pool.num_cached} cached prefix blocks, "
+          f"high-water {rt.pool.high_water}")
+    st = rt.stats
+    if st["prompt_tokens"]:
+        pct = 100.0 * st["shared_tokens"] / st["prompt_tokens"]
+        print(f"prefix sharing: {st['shared_tokens']}/"
+              f"{st['prompt_tokens']} prompt tokens ({pct:.0f}%) mapped "
+              f"from resident blocks ({st['shared_block_maps']} block maps)")
     print(f"decode compiles after warmup: {rt.decode_compiles()} "
           f"(fixed-shape slot batch -> exactly 1)")
 

@@ -8,14 +8,12 @@ while every row reads the same backbone tensors.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import transformer as tf
-from repro.models.cache import effective_cache_len
 from repro.models.config import ModelConfig
 
 Params = Dict[str, Any]
@@ -56,9 +54,16 @@ def make_serve_step(cfg: ModelConfig):
 def make_insert_fn(cfg: ModelConfig, block_size: int):
     """Slot-wise cache *insert*: scatter a prefilled contiguous cache into
     pool blocks.  ``block_ids``: (G, nb) int32 physical block ids per row —
-    entries equal to the garbage block (0) dump right-padding junk that the
-    decode mask never reads.  Returns a pure fn to be jitted by the caller:
-    (pool_cache, prefill_cache, block_ids) -> pool_cache."""
+    entries equal to the garbage block (0) are *skipped* (their slab lands
+    in the garbage block, which the decode mask never reads).  The serving
+    runtime uses that skip for two things: right-padding junk past a row's
+    prompt, and prompt blocks covered by cross-request prefix sharing —
+    a shared physical block is written exactly once, by the request that
+    first registered it, so rows of one group never race on a block the
+    scatter would otherwise write twice (``.at[].set`` with duplicate
+    destinations is order-nondeterministic).  Returns a pure fn to be
+    jitted by the caller: (pool_cache, prefill_cache, block_ids) ->
+    pool_cache."""
 
     def insert_layer(pool_l, pre_l, block_ids, stacked):
         # pools are heads-major: (P, K, NB, bs, hd) stacked | (K, NB, bs, hd)

@@ -21,7 +21,7 @@ from typing import Dict, Optional  # noqa: E402
 
 import jax          # noqa: E402
 
-from repro.configs import ASSIGNED_ARCHS, ARCH_IDS, get_config  # noqa: E402
+from repro.configs import ASSIGNED_ARCHS, get_config  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.launch.sharding import (BASELINE, OPTIMIZED,  # noqa: E402
                                    ShardingOptions, batch_specs,
@@ -91,8 +91,6 @@ def arg_shardings(step: StepSpec, mesh, cfg, opts: ShardingOptions = BASELINE):
 def _set_opt_modes(mesh, opts) -> None:
     """Install/clear the module-level optimization modes (shard_map MoE
     dispatch, activation-sharding constraint) around a lowering."""
-    from jax.sharding import PartitionSpec as P
-    from repro.launch.mesh import batch_axes
     from repro.models import transformer as tf_mod
     if mesh is None or opts is None:
         moe_mod.set_parallel_mesh(None)

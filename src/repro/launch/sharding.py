@@ -16,7 +16,7 @@ head counts (15 heads, 8 kv-heads on a 16-way axis) degrade gracefully.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import numpy as np

@@ -23,7 +23,7 @@ from repro.core.lora import partition_lora
 from repro.models import transformer as tf
 from repro.models.cache import effective_cache_len
 from repro.models.config import ModelConfig
-from repro.training.adamw import AdamW, AdamWState, constant_schedule
+from repro.training.adamw import AdamW, constant_schedule
 from repro.training.train import make_lora_train_step
 
 INPUT_SHAPES: Dict[str, Dict[str, int]] = {

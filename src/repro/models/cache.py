@@ -81,9 +81,10 @@ def paged_attn_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
 
 def paging_unsupported_reason(cfg: ModelConfig) -> Optional[str]:
     """None if the config can be served by the paged runtime.  Sliding-window
-    configs ARE servable: the paged decode masks by window in-kernel (all
-    blocks are retained; out-of-window block *reclamation* is a separate
-    memory optimization, not a correctness requirement)."""
+    configs ARE servable: the paged decode masks by window in-kernel, and
+    the runtime releases blocks that slide fully out of the window back to
+    the pool mid-flight (``ServingConfig.window_reclamation`` — the mask
+    makes the release safe, never the other way around)."""
     kinds = set(cfg.pattern) | set(cfg.remainder_layers)
     if kinds != {ATTN}:
         return f"paged serving needs attention-only stacks, got {sorted(kinds)}"

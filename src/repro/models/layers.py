@@ -13,7 +13,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.models.config import GELU, MOE, NONE, SQRELU, SWIGLU, ModelConfig
+from repro.models.config import GELU, MOE, SQRELU, SWIGLU, ModelConfig
 
 Params = Dict[str, Any]
 

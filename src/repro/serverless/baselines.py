@@ -19,7 +19,7 @@ behaviour at the granularity our latency model resolves:
 from __future__ import annotations
 
 import dataclasses
-from typing import FrozenSet, Optional
+from typing import FrozenSet
 
 from repro.serverless.artifacts import Kind
 

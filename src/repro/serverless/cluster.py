@@ -9,7 +9,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Set, Tuple
 
-from repro.serverless.artifacts import Artifact, Kind, Tier
+from repro.serverless.artifacts import Artifact
 
 
 @dataclasses.dataclass

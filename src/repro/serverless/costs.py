@@ -9,7 +9,6 @@ prices reflect.  Cost-effectiveness = 1 / (E2E latency × cost) (§2.1 fn 3).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,20 +1,25 @@
 """Continuous-batching serving runtime (paper §4.2 + §4.4, real compute).
 
 Layout:
-  * ``kv_pool``  — host-side paged KV block manager (free-list, no leaks).
+  * ``kv_pool``  — host-side paged KV block manager with a refcounted
+                   lifecycle (free -> live -> cached -> evicted).
+  * ``prefix``   — hash-trie mapping full prompt blocks to physical pool
+                   blocks (cross-request prefix sharing).
   * ``slots``    — decode-slot table + SLO admission scheduler (reuses the
                    fill-or-expire math from ``serverless.batching``).
   * ``runtime``  — fixed-shape jitted prefill/decode loop over the paged
-                   cache; requests join and leave mid-decode, no re-jit.
+                   cache; requests join and leave mid-decode, no re-jit;
+                   prefix-shared admission + sliding-window reclamation.
   * ``replay``   — feeds ``serverless.traces`` arrival streams through the
                    runtime and emits simulator-compatible Request records.
 """
 from repro.serving.kv_pool import BlockPool, blocks_for_tokens
+from repro.serving.prefix import PrefixCache
 from repro.serving.runtime import ContinuousRuntime, ServingConfig
 from repro.serving.replay import replay_trace
 from repro.serving.slots import AdmissionScheduler, SlotTable
 
 __all__ = [
-    "AdmissionScheduler", "BlockPool", "ContinuousRuntime", "ServingConfig",
-    "SlotTable", "blocks_for_tokens", "replay_trace",
+    "AdmissionScheduler", "BlockPool", "ContinuousRuntime", "PrefixCache",
+    "ServingConfig", "SlotTable", "blocks_for_tokens", "replay_trace",
 ]

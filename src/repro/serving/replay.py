@@ -44,10 +44,15 @@ def replay_trace(runtime: ContinuousRuntime, workload: Sequence[Dict],
                  fn_adapter: Dict[str, int], *, seed: int = 0,
                  prefill_group: Optional[int] = None,
                  slo_abandon: bool = True,
-                 collect_events: bool = False
+                 collect_events: bool = False,
+                 prompts: Optional[Dict[int, np.ndarray]] = None
                  ) -> Tuple[SimResult, List[ReplayEvent]]:
     """Feed a ``serverless.traces.make_workload`` stream through the real
     engine.  ``fn_adapter`` maps fn_id -> adapter index in the stacked bank.
+
+    ``prompts`` maps req_id -> token array; by default deterministic random
+    prompts are synthesized from the trace lengths (pass real prompts to
+    exercise cross-request prefix sharing — e.g. a common system prompt).
 
     Returns (SimResult, events).  Request records: ``dispatch`` = admission,
     ``first_token`` = prefill completion (or -1 if abandoned), ``done`` =
@@ -70,7 +75,20 @@ def replay_trace(runtime: ContinuousRuntime, workload: Sequence[Dict],
                 f"req {w['req_id']}: prompt {w['prompt_len']} / output "
                 f"{w['output_len']} exceeds per-slot KV capacity")
 
-    prompts = synth_prompts(workload, runtime.cfg.vocab_size, seed)
+    if prompts is None:
+        prompts = synth_prompts(workload, runtime.cfg.vocab_size, seed)
+    else:
+        missing = [w["req_id"] for w in workload
+                   if w["req_id"] not in prompts]
+        if missing:
+            raise ValueError(f"prompts missing req_id(s) {missing[:8]}"
+                             + ("..." if len(missing) > 8 else ""))
+        for w in workload:
+            if len(prompts[w["req_id"]]) != w["prompt_len"]:
+                raise ValueError(
+                    f"req {w['req_id']}: prompt array length "
+                    f"{len(prompts[w['req_id']])} != trace prompt_len "
+                    f"{w['prompt_len']}")
     requests: List[Request] = []
     arrivals: List[Request] = []
     for w in workload:
@@ -91,8 +109,11 @@ def replay_trace(runtime: ContinuousRuntime, workload: Sequence[Dict],
     def finish(st: SlotState, t_done: float) -> None:
         st.req.done = t_done
         live.pop(st.sid, None)
+        held = sum(1 for b in st.blocks if b >= 0)
         log("finish", st.req.req_id, st.sid,
-            f"{st.produced} tokens, {len(st.blocks)} blocks freed")
+            f"{st.produced} tokens, {held} blocks released"
+            + (f", {st.reclaimed} reclaimed mid-flight"
+               if st.reclaimed else ""))
 
     while ai < len(arrivals) or sched.pending or runtime.slots.num_active:
         while ai < len(arrivals) and arrivals[ai].arrival <= now + 1e-12:
@@ -138,9 +159,11 @@ def replay_trace(runtime: ContinuousRuntime, workload: Sequence[Dict],
                 r.breakdown["queue_wait"] = r.dispatch - r.arrival
                 r.breakdown["prefill"] = res.dt
                 token_times[r.req_id] = [now]
+                shared = res.shared_blocks[i] if res.shared_blocks else 0
                 log("admit", r.req_id, res.slot_ids[i],
                     f"adapter {fn_adapter[r.fn_id]}, "
-                    f"prompt {r.prompt_len}")
+                    f"prompt {r.prompt_len}"
+                    + (f", {shared} prefix blocks shared" if shared else ""))
             for st in res.finished:          # output_len == 1 / instant EOS
                 finish(st, now)
             for sid in res.slot_ids:

@@ -15,13 +15,37 @@ slot-wise into pool blocks (``core.engine.make_insert_fn``).  Right-padding
 junk inside the bucket lands either in blocks the decode loop overwrites
 before it can be attended, or in the reserved garbage block.
 
-Leave path: EOS / token budget exhausted -> blocks return to the free list.
+Leave path: EOS / token budget exhausted -> block refcounts drop; the last
+holder actually frees (prefix-shared blocks survive their first owner).
 If the pool runs dry mid-flight a slot *stalls*: it still runs the chunk
 from its current (token, pos) — writes into allocated blocks are identical
 to what the eventual resume writes, overflow writes clip to the garbage
 block — but its outputs are discarded and it does not advance.  If every
 slot stalls the runtime force-evicts the stalled slot closest to
 completion so the system always makes progress.
+
+Cross-request prefix sharing (``ServingConfig.prefix_sharing``): admission
+matches the longest chain of *full* prompt blocks already in the pool for
+the same adapter (``serving.prefix.PrefixCache``) and maps those physical
+blocks into the new slot's table with refcount bumps instead of allocating
+and re-inserting them.  Only full prompt blocks are ever shared, so the
+partially-filled tail block — the only block decode could still write
+inside the prompt range — is always a private copy (copy-on-write by
+construction; decode writes land at pos >= prompt_len, past every shared
+block).  The prefill still runs its fixed bucket shape (paged prefill is
+the open item), but the covered blocks' insert is skipped: their table
+entries in the scatter are redirected to the garbage block.
+
+Sliding-window reclamation (``ServingConfig.window_reclamation``): after
+each decode chunk, blocks whose entire [j*bs, (j+1)*bs) token range slid
+out of the window are released back to the pool and the slot's table entry
+set to -1 — legal because every decode path already masks both -1 entries
+and positions <= pos - window, so those keys can never be read again.
+Per-slot *live* working set shrinks to O(window); the block table still
+caps total sequence length (logical index == absolute position).
+
+Both features are host-side block-table/lifecycle work: the compiled
+decode step is untouched (block tables stay host-side arguments).
 """
 from __future__ import annotations
 
@@ -41,6 +65,7 @@ from repro.models.cache import (GARBAGE_BLOCK, init_paged_cache,
 from repro.models.config import ModelConfig
 from repro.serverless.batching import Request
 from repro.serving.kv_pool import BlockPool, blocks_for_tokens
+from repro.serving.prefix import PrefixCache
 from repro.serving.slots import SlotState, SlotTable
 
 
@@ -57,6 +82,11 @@ class ServingConfig:
     use_kernel: bool = True          # in-kernel block-table walk for decode
     #   attention (Pallas on TPU, fused jnp block walk elsewhere); False =
     #   the gather-based reference path
+    prefix_sharing: bool = True      # map full prompt blocks shared with
+    #   earlier same-adapter requests into the slot table (refcounted)
+    #   instead of allocating + re-inserting them
+    window_reclamation: bool = True  # sliding-window configs: release
+    #   blocks that slid fully out of the window after each decode chunk
 
 
 @dataclasses.dataclass
@@ -66,6 +96,8 @@ class AdmitResult:
     first_tokens: List[int]
     finished: List[SlotState]        # output_len == 1 completes at prefill
     dt: float
+    shared_blocks: List[int] = dataclasses.field(default_factory=list)
+    #   per item: prompt blocks mapped from the prefix cache (not allocated)
 
 
 @dataclasses.dataclass
@@ -92,6 +124,21 @@ class ContinuousRuntime:
         self.pool = BlockPool(scfg.num_blocks, scfg.block_size)
         self.slots = SlotTable(scfg.num_slots, scfg.max_blocks_per_slot)
         self.cache = init_paged_cache(cfg, scfg.num_blocks, scfg.block_size)
+        self.prefix: Optional[PrefixCache] = None
+        if scfg.prefix_sharing:
+            self.prefix = PrefixCache(scfg.block_size)
+            # freed prompt blocks park in the pool's cached LRU while the
+            # prefix index maps them; eviction drops the mapping
+            self.pool.cache_hook = self.prefix.has_block
+            self.pool.evict_hook = self.prefix.forget_block
+        self.stats: Dict[str, int] = {
+            "prompt_tokens": 0,      # tokens in admitted prompts
+            "prefill_tokens": 0,     # prompt tokens newly inserted into the
+            #   pool (prompt_tokens minus prefix-shared coverage)
+            "shared_tokens": 0,      # prompt tokens covered by shared blocks
+            "shared_block_maps": 0,  # table entries mapped via sharing
+            "reclaimed_blocks": 0,   # blocks returned mid-flight (window)
+        }
 
         serve = make_serve_step(cfg)
         prefill = make_prefill_step(cfg)
@@ -152,26 +199,74 @@ class ContinuousRuntime:
         return blocks_for_tokens(prompt_len + extra, self.scfg.block_size)
 
     # ----------------------------------------------------------- admission
+    def _plan_blocks(self, items: Sequence[Tuple[Request, np.ndarray, int]]
+                     ) -> Optional[List[Tuple[List[int], List[int]]]]:
+        """Per item, (shared prefix blocks, freshly allocated blocks) —
+        logical order is shared + fresh.  Sequential with rollback so items
+        inside one group can share each other's just-registered blocks;
+        returns None (pool state restored, bar evicted cached entries) if
+        any item's fresh allocation cannot be covered."""
+        plans: List[Tuple[List[int], List[int]]] = []
+        registered: List[List[int]] = []
+        for req, prompt, adapter in items:
+            need = self.admit_cost_blocks(len(prompt), req.output_len)
+            shared: List[int] = []
+            node = None
+            if self.prefix is not None:
+                shared, node = self.prefix.match(adapter, prompt)
+                # shared chains cover only full prompt blocks, so they can
+                # never reach the block the first decode write lands in
+                self.pool.share(shared)
+            fresh = self.pool.alloc(need - len(shared))
+            if fresh is None:
+                if shared:
+                    self.pool.free(shared)
+                for plan, reg in zip(reversed(plans), reversed(registered)):
+                    for b in reg:            # un-index BEFORE freeing: the
+                        #   blocks were never written (no prefill ran)
+                        self.prefix.forget_block(b)
+                    if plan[1]:
+                        self.pool.free(plan[1])
+                    if plan[0]:
+                        self.pool.free(plan[0])
+                return None
+            reg: List[int] = []
+            if self.prefix is not None:
+                reg = self.prefix.register(adapter, prompt, shared + fresh,
+                                           len(shared), node)
+            plans.append((shared, fresh))
+            registered.append(reg)
+        return plans
+
     def try_admit(self, items: Sequence[Tuple[Request, np.ndarray, int]]
                   ) -> Optional[AdmitResult]:
         """Join ``(request, prompt_tokens, adapter)`` tuples into free slots.
 
-        All-or-nothing: returns None (no state change) if slots or blocks
-        are short.  len(items) must be <= prefill_group."""
+        All-or-nothing: returns None (no state change beyond prefix-cache
+        eviction) if slots or blocks are short.  len(items) must be <=
+        prefill_group.
+
+        Prefix sharing: each item's longest chain of full prompt blocks
+        already indexed for its adapter is mapped into the slot table with
+        refcount bumps; the prefill scatter skips those blocks (their
+        ``ids_mat`` entries stay at the garbage block), so a shared block
+        is written exactly once in its lifetime — by the request that first
+        registered it — and decode writes (pos >= prompt_len) can never
+        reach it.  The partially-filled tail block is never shared: the new
+        request gets a private copy filled by its own prefill insert."""
         scfg = self.scfg
         assert 0 < len(items) <= scfg.prefill_group
         free = self.slots.free_slots()
         if len(items) > len(free):
-            return None
-        need = sum(self.admit_cost_blocks(len(p), r.output_len)
-                   for r, p, _ in items)
-        if need > self.pool.available:
             return None
         for r, p, _ in items:
             if not self.fits(len(p), max(r.output_len, 1)):
                 raise ValueError(
                     f"req {r.req_id}: prompt {len(p)} / output "
                     f"{r.output_len} exceeds slot KV capacity")
+        plans = self._plan_blocks(items)
+        if plans is None:
+            return None
 
         bucket = self.bucket_for(max(len(p) for _, p, _ in items))
         nb_insert = bucket // scfg.block_size
@@ -180,16 +275,24 @@ class ContinuousRuntime:
         last_pos = np.zeros((G,), np.int32)
         adapters = np.zeros((G,), np.int32)
         ids_mat = np.full((G, nb_insert), GARBAGE_BLOCK, np.int32)
-        allocs: List[List[int]] = []
         for i, (req, prompt, adapter) in enumerate(items):
             L = len(prompt)
-            ids = self.pool.alloc(self.admit_cost_blocks(L, req.output_len))
-            assert ids is not None            # covered by the `need` check
-            allocs.append(ids)
+            shared, fresh = plans[i]
             tokens[i, :L] = prompt
             last_pos[i] = L - 1
             adapters[i] = adapter
-            ids_mat[i, : min(len(ids), nb_insert)] = ids[:nb_insert]
+            # scatter only the uncovered tail: logical entries [0, shared)
+            # keep the garbage id (skip — the shared block already holds
+            # exactly these K/V values, and skipping also keeps each
+            # physical block single-writer within the group dispatch)
+            blocks = shared + fresh
+            for j in range(len(shared), min(len(blocks), nb_insert)):
+                ids_mat[i, j] = blocks[j]
+            self.stats["prompt_tokens"] += L
+            cov = len(shared) * scfg.block_size
+            self.stats["shared_tokens"] += cov
+            self.stats["prefill_tokens"] += L - cov
+            self.stats["shared_block_maps"] += len(shared)
 
         t0 = time.perf_counter()
         first, self.cache = self._prefill(
@@ -201,16 +304,20 @@ class ContinuousRuntime:
         slot_ids, first_tokens, finished = [], [], []
         for i, (req, prompt, adapter) in enumerate(items):
             sid = free[i]
+            shared, fresh = plans[i]
             st = SlotState(sid=sid, req=req, adapter=adapter,
                            prompt_len=len(prompt),
                            budget=max(req.output_len, 1), pos=len(prompt),
-                           blocks=allocs[i], last_token=int(first[i]))
+                           blocks=shared + fresh, last_token=int(first[i]),
+                           shared=len(shared))
             first_tokens.append(int(first[i]))
             done = st.budget == 1 or (scfg.eos_id is not None
                                       and int(first[i]) == scfg.eos_id)
             if done:
                 # finished at prefill: never bound, so free[i] would be a
-                # lie — report -1 (the slot stays free for other requests)
+                # lie — report -1 (the slot stays free for other requests).
+                # The free is a refcount drop: registered prompt blocks park
+                # in the pool's cached LRU for future admits to share.
                 st.sid = -1
                 slot_ids.append(-1)
                 self.pool.free(st.blocks)
@@ -218,7 +325,8 @@ class ContinuousRuntime:
             else:
                 slot_ids.append(sid)
                 self.slots.bind(st, int(first[i]))
-        return AdmitResult(slot_ids, first_tokens, finished, dt)
+        return AdmitResult(slot_ids, first_tokens, finished, dt,
+                           shared_blocks=[len(p[0]) for p in plans])
 
     # -------------------------------------------------------------- decode
     def _ensure_blocks(self) -> Tuple[List[int], List[SlotState]]:
@@ -293,7 +401,29 @@ class ContinuousRuntime:
                 s.last_token = int(accept[-1])
                 self.slots.pos[s.sid] = s.pos
                 self.slots.tokens[s.sid] = s.last_token
+                self._reclaim_window(s)
         return DecodeResult(emitted, finished, aborted, stalled, dt)
+
+    def _reclaim_window(self, s: SlotState) -> None:
+        """Release blocks that slid fully out of the sliding window.
+
+        Every future query of this slot sits at position >= s.pos, and all
+        decode paths mask keys at t <= pos - window (and -1 table entries),
+        so a block whose whole [j*bs, (j+1)*bs) range is <= s.pos - window
+        can never be read (or written: writes land at pos // bs >= the
+        first live block) again.  The release is a refcount drop — a
+        prefix-shared prompt block outlives this slot's window if other
+        requests still map it, and a registered one parks in the cached
+        LRU, still matchable by future admits."""
+        w = self.cfg.sliding_window
+        if w is None or not self.scfg.window_reclamation:
+            return
+        dead = (s.pos - w + 1) // self.scfg.block_size
+        if dead > s.reclaimed:
+            freed = self.slots.reclaim(s.sid, dead)
+            if freed:
+                self.pool.free(freed)
+                self.stats["reclaimed_blocks"] += len(freed)
 
     # -------------------------------------------------------------- meta
     def warmup(self) -> Dict[str, Any]:

@@ -14,7 +14,7 @@ request whose TTFT deadline already passed is dropped instead of admitted.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import numpy as np
 
@@ -31,10 +31,15 @@ class SlotState:
     prompt_len: int
     budget: int                  # max output tokens (incl. the prefill token)
     pos: int                     # next KV write position (absolute)
-    blocks: List[int]            # physical block ids, logical order
+    blocks: List[int]            # physical block ids, logical order; -1 =
+    #   reclaimed (slid fully out of the sliding window, returned to pool)
     last_token: int              # last accepted token (stall replays it)
     produced: int = 1            # tokens emitted so far (prefill emits one)
     stalled: bool = False
+    shared: int = 0              # leading blocks mapped from the prefix
+    #   cache at admit (refcount bumps, not fresh allocations)
+    reclaimed: int = 0           # logical blocks [0, reclaimed) returned to
+    #   the pool by sliding-window reclamation
 
 
 class SlotTable:
@@ -77,8 +82,27 @@ class SlotTable:
         self.block_tbl[sid, len(s.blocks)] = block_id
         s.blocks.append(block_id)
 
+    def reclaim(self, sid: int, upto: int) -> List[int]:
+        """Drop logical blocks [0, upto) that slid fully out of the sliding
+        window: table entries become -1 (the decode mask already never reads
+        them) and the physical ids are returned for the pool to release.
+        Monotonic and idempotent — already-reclaimed entries are skipped."""
+        s = self.states[sid]
+        assert s is not None
+        upto = min(upto, len(s.blocks))
+        freed: List[int] = []
+        for j in range(s.reclaimed, upto):
+            b = s.blocks[j]
+            if b >= 0:
+                freed.append(b)
+                s.blocks[j] = -1
+                self.block_tbl[sid, j] = -1
+        s.reclaimed = max(s.reclaimed, upto)
+        return freed
+
     def release(self, sid: int) -> List[int]:
-        """Unbind a slot; returns its blocks for the pool to reclaim."""
+        """Unbind a slot; returns its still-held blocks for the pool to
+        release (reclaimed -1 placeholders were already returned)."""
         s = self.states[sid]
         assert s is not None
         self.states[sid] = None
@@ -86,7 +110,7 @@ class SlotTable:
         self.pos[sid] = 0
         self.adapter[sid] = 0
         self.block_tbl[sid, :] = -1
-        return s.blocks
+        return [b for b in s.blocks if b >= 0]
 
 
 class AdmissionScheduler:

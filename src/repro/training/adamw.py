@@ -6,7 +6,7 @@ State and update are pytree-structured so they compose with pjit sharding
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -4,8 +4,8 @@ installed and SKIP (instead of aborting collection) when it is not.
 Usage in test modules:  ``from _hypothesis_compat import given, settings, st``
 """
 try:
-    from hypothesis import given, settings
-    from hypothesis import strategies as st
+    from hypothesis import given, settings        # noqa: F401 (re-export)
+    from hypothesis import strategies as st       # noqa: F401 (re-export)
     HAVE_HYPOTHESIS = True
 except ModuleNotFoundError:
     import pytest

@@ -2,9 +2,7 @@
 import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.store import (checkpoint_manifest, load_checkpoint,
                                     save_checkpoint)

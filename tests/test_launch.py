@@ -1,15 +1,13 @@
 """Launch-layer unit tests: input-shape → step mapping, config adaptation
 rules, optimized sharding options, mesh helpers."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ASSIGNED_ARCHS, get_config
-from repro.launch.sharding import (BASELINE, OPTIMIZED, ShardingOptions,
-                                   params_specs, resolve_weight_mode,
-                                   spec_for_leaf)
+from repro.launch.sharding import (BASELINE, OPTIMIZED, params_specs,
+                                   resolve_weight_mode, spec_for_leaf)
 from repro.launch.specs import (INPUT_SHAPES, abstract_params, adapt_config,
                                 batch_inputs, build_step)
 

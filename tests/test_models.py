@@ -2,9 +2,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.models.config import ATTN, REC, LoRAConfig, ModelConfig
+from repro.models.config import REC, ModelConfig
 from repro.models import transformer as tf
 from repro.models.layers import (_scores_mask, attention_chunked,
                                  attention_core)

@@ -1,0 +1,381 @@
+"""Refcounted block lifecycle: cross-request prefix sharing and
+sliding-window reclamation.
+
+Covers the three layers: BlockPool refcount/cached/evict transitions (incl.
+the double-release-of-shared-block and reset-with-live-blocks regressions),
+the PrefixCache trie in isolation, and the runtime end-to-end — shared
+admits map the same physical blocks, decode logits after sharing and after
+reclamation bitwise-match the unshared gather reference path, and every
+block is reclaimed on drain."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.engine import make_serve_step
+from repro.models import transformer as tf
+from repro.serverless.batching import Request
+from repro.serving import (BlockPool, ContinuousRuntime, PrefixCache,
+                           ServingConfig)
+
+
+# ------------------------------------------------------------- block pool
+def test_refcount_share_and_last_release_frees():
+    pool = BlockPool(num_blocks=8, block_size=4)
+    a = pool.alloc(2)
+    pool.share(a)                         # refcount 1 -> 2
+    assert pool.refcount(a[0]) == 2
+    pool.free(a)                          # 2 -> 1: still live
+    assert pool.in_use == 2 and pool.available == 5
+    pool.free(a)                          # 1 -> 0: actually freed
+    assert pool.in_use == 0 and pool.available == 7
+    assert pool.high_water == 2
+
+
+def test_double_release_of_shared_block_raises():
+    """Regression: a block shared by two slots is released twice (once per
+    slot) — a THIRD release must raise, not corrupt the free list."""
+    pool = BlockPool(num_blocks=8, block_size=4)
+    a = pool.alloc(1)
+    pool.share(a)
+    pool.free(a)
+    pool.free(a)                          # last holder frees
+    with pytest.raises(KeyError):
+        pool.free(a)                      # double release of a freed block
+    assert pool.available == 7            # pool untouched by the bad free
+    with pytest.raises(KeyError):
+        pool.share(a)                     # sharing a free block is a bug
+    with pytest.raises(KeyError):
+        pool.free([a[0], a[0]])           # duplicate ids in one call
+
+
+def test_share_is_atomic():
+    pool = BlockPool(num_blocks=8, block_size=4)
+    a = pool.alloc(2)
+    with pytest.raises(KeyError):
+        pool.share([a[0], 99])            # valid prefix + unknown id
+    assert pool.refcount(a[0]) == 1       # nothing was bumped
+
+
+def test_cached_lifecycle_eviction_and_revival():
+    """refcount 0 + cache_hook -> cached LRU; alloc evicts oldest first
+    (firing evict_hook); share revives a cached block to live."""
+    evicted = []
+    pool = BlockPool(num_blocks=6, block_size=4)
+    pool.cache_hook = lambda b: True
+    pool.evict_hook = evicted.append
+    a = pool.alloc(5)
+    pool.free(a)
+    assert pool.in_use == 0 and pool.num_cached == 5
+    assert pool.available == 5            # cached blocks are allocatable
+    pool.share([a[2]])                    # revive from cached
+    assert pool.refcount(a[2]) == 1 and pool.num_cached == 4
+    got = pool.alloc(2)                   # free list empty: evicts LRU
+    assert got is not None
+    assert evicted == [a[0], a[1]]        # oldest-freed evicted first
+    pool.free(got + [a[2]])
+
+
+def test_reset_raises_on_live_blocks_and_clears_cached():
+    evicted = []
+    pool = BlockPool(num_blocks=8, block_size=4)
+    pool.cache_hook = lambda b: True
+    pool.evict_hook = evicted.append
+    a = pool.alloc(2)
+    with pytest.raises(RuntimeError):
+        pool.reset()                      # live blocks: reset is a leak
+    pool.free(a)                          # -> cached
+    assert pool.num_cached == 2
+    pool.reset()                          # owner-less cached blocks: fine
+    assert sorted(evicted) == sorted(a)   # index told to forget them
+    assert pool.num_cached == 0 and pool.available == 7
+    assert pool.high_water == 0
+
+
+# ----------------------------------------------------------- prefix cache
+def test_prefix_cache_match_register_forget():
+    pc = PrefixCache(block_size=4)
+    toks = np.arange(10, dtype=np.int32)        # 2 full blocks + tail of 2
+    cov, node = pc.match(0, toks)
+    assert cov == [] and node is None
+    new = pc.register(0, toks, [5, 6, 7], 0, node)
+    assert new == [5, 6]                        # only FULL blocks indexed
+    assert pc.has_block(5) and pc.has_block(6) and not pc.has_block(7)
+    assert pc.match(0, toks)[0] == [5, 6]
+    assert pc.match(1, toks)[0] == []           # keyed by adapter
+    assert pc.match(0, np.arange(4))[0] == [5]  # shorter prompt, same prefix
+    fork = np.array([0, 1, 2, 3, 9, 9, 9, 9], np.int32)
+    assert pc.match(0, fork)[0] == [5]          # diverges at block 1
+    # registering the fork chains its block under the shared first node
+    cov, node = pc.match(0, fork)
+    assert pc.register(0, fork, [5, 8], 1, node) == [8]
+    assert pc.match(0, fork)[0] == [5, 8]
+    # forgetting a mid-chain block orphans descendants (unreachable)
+    pc.forget_block(5)
+    assert pc.match(0, toks)[0] == []
+    assert not pc.has_block(5) and pc.has_block(6)
+    pc.forget_block(6)
+    pc.forget_block(8)
+    assert len(pc) == 0
+
+
+def test_prefix_cache_duplicate_registration_keeps_existing():
+    pc = PrefixCache(block_size=4)
+    toks = np.arange(8, dtype=np.int32)
+    pc.register(0, toks, [3, 4], 0, None)
+    # a concurrent identical prompt registered with different physical
+    # blocks: existing mapping wins, the copy stays unindexed
+    assert pc.register(0, toks, [9, 10], 0, None) == []
+    assert pc.match(0, toks)[0] == [3, 4]
+    assert not pc.has_block(9) and not pc.has_block(10)
+
+
+# ---------------------------------------------------------------- runtime
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_smoke("llama2_7b").with_(dtype="float32")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg, lora_adapters=3)
+    return cfg, params
+
+
+def _req(rid, prompt_len, output_len):
+    return Request(req_id=rid, fn_id="fn0", arrival=0.0,
+                   prompt_len=prompt_len, output_len=output_len,
+                   slo_ttft=30.0)
+
+
+def _mk_rt(cfg, params, **kw):
+    scfg = ServingConfig(num_slots=4, block_size=8, num_blocks=32,
+                         max_blocks_per_slot=6, prefill_buckets=(16, 32),
+                         prefill_group=2, decode_chunk=4, **kw)
+    return ContinuousRuntime(cfg, params, scfg)
+
+
+def _drain(rt, max_chunks=64):
+    out = {}
+    for _ in range(max_chunks):
+        d = rt.decode()
+        if d is None:
+            break
+        for sid, toks in d.emitted.items():
+            out.setdefault(sid, []).extend(toks)
+    return out
+
+
+def test_admit_maps_shared_prefix_blocks(small_model):
+    cfg, params = small_model
+    rt = _mk_rt(cfg, params)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, 512, 16, dtype=np.int32)   # 2 full blocks
+
+    r0 = rt.try_admit([(_req(0, 16, 8), prompt, 0)])
+    sid0 = r0.slot_ids[0]
+    blocks0 = list(rt.slots.states[sid0].blocks)
+    assert r0.shared_blocks == [0]                      # cold cache
+
+    r1 = rt.try_admit([(_req(1, 16, 8), prompt, 0)])    # overlapping admit
+    st1 = rt.slots.states[r1.slot_ids[0]]
+    assert r1.shared_blocks == [2]          # both full prompt blocks map
+    #   shared; the 3rd block (first decode write) is always private
+    assert st1.shared == 2
+    assert st1.blocks[:2] == blocks0[:2]
+    assert st1.blocks[2] != blocks0[2]
+    for b in st1.blocks[:2]:
+        assert rt.pool.refcount(b) == 2
+    assert rt.stats["shared_tokens"] == 16
+    assert rt.stats["prefill_tokens"] == 16    # r0 full, r1 fully covered
+    assert rt.stats["prompt_tokens"] == 32
+
+    r2 = rt.try_admit([(_req(2, 16, 8), prompt, 1)])    # other adapter
+    assert r2.shared_blocks == [0]
+
+    _drain(rt)
+    assert rt.slots.num_active == 0 and rt.pool.in_use == 0
+    assert rt.pool.num_cached > 0           # prompt blocks kept for reuse
+
+
+def test_shared_blocks_survive_first_owner(small_model):
+    """The registering request finishes first; an overlapping sharer must
+    keep decoding off the shared blocks (refcount, not ownership)."""
+    cfg, params = small_model
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, 512, 16, dtype=np.int32)
+
+    def run(sharing):
+        rt = _mk_rt(cfg, params, prefix_sharing=sharing)
+        r0 = rt.try_admit([(_req(0, 16, 5), prompt, 0)])   # finishes early
+        r1 = rt.try_admit([(_req(1, 16, 13), prompt, 0)])  # outlives r0
+        if sharing:
+            assert r1.shared_blocks[0] >= 1
+        out = _drain(rt)
+        assert rt.slots.num_active == 0 and rt.pool.in_use == 0
+        return [r0.first_tokens[0]] + out.get(r0.slot_ids[0], []), \
+               [r1.first_tokens[0]] + out.get(r1.slot_ids[0], [])
+
+    assert run(True) == run(False)
+
+
+def test_shared_prefix_decode_logits_bitwise(small_model):
+    """Acceptance: decode over prefix-shared blocks must reproduce the
+    unshared gather reference logits BIT-FOR-BIT (same values gathered
+    from different physical blocks, same math)."""
+    cfg, params = small_model
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, 512, 16, dtype=np.int32)
+
+    def admit_b(sharing):
+        rt = _mk_rt(cfg, params, prefix_sharing=sharing)
+        rt.try_admit([(_req(0, 16, 9), prompt, 0)])
+        _drain(rt)                       # A finishes; its blocks park cached
+        rb = rt.try_admit([(_req(1, 16, 9), prompt, 0)])
+        if sharing:
+            assert rb.shared_blocks[0] >= 1, "sharing never engaged"
+        return rt, rb.slot_ids[0]
+
+    rt1, sid1 = admit_b(True)
+    rt0, sid0 = admit_b(False)
+    assert sid1 == sid0                  # identical admit sequence
+
+    serve = make_serve_step(cfg)
+
+    def steps(rt, n=4):
+        tokens = rt.slots.tokens.copy()
+        pos = rt.slots.pos.copy()
+        cache = rt.cache                 # fork: rt.cache itself untouched
+        outs = []
+        for _ in range(n):
+            lg, cache = serve(params, jnp.asarray(tokens), cache,
+                              jnp.asarray(pos),
+                              adapter_idx=jnp.asarray(rt.slots.adapter),
+                              block_tbl=jnp.asarray(rt.slots.block_tbl),
+                              use_paged_kernel=False)
+            lg = np.asarray(lg)
+            outs.append(lg)
+            nxt = lg.argmax(-1).astype(np.int32)
+            for s in rt.slots.active():
+                tokens[s.sid] = nxt[s.sid]
+                pos[s.sid] += 1
+        return outs
+
+    for a, b in zip(steps(rt1), steps(rt0)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_window_reclamation_frees_blocks_logits_bitwise(small_model):
+    """Acceptance: with a sliding window, blocks that slid fully out are
+    returned mid-flight (table entry -> -1, live working set shrinks), and
+    post-reclamation decode logits bitwise-match the keep-everything
+    unshared gather reference."""
+    cfg, params = small_model
+    swa = cfg.with_(sliding_window=8)
+    rng = np.random.default_rng(13)
+    prompt = rng.integers(0, 512, 12, dtype=np.int32)
+
+    def mk(reclaim):
+        scfg = ServingConfig(num_slots=2, block_size=4, num_blocks=32,
+                             max_blocks_per_slot=8, prefill_buckets=(16,),
+                             prefill_group=2, decode_chunk=4,
+                             prefix_sharing=False,
+                             window_reclamation=reclaim)
+        rt = ContinuousRuntime(swa, params, scfg)
+        rt.try_admit([(_req(0, 12, 21), prompt, 0)])
+        return rt
+
+    rt_rec, rt_keep = mk(True), mk(False)
+    serve = make_serve_step(swa)
+
+    def one_gather_step(rt):
+        lg, _ = serve(params, jnp.asarray(rt.slots.tokens), rt.cache,
+                      jnp.asarray(rt.slots.pos),
+                      adapter_idx=jnp.asarray(rt.slots.adapter),
+                      block_tbl=jnp.asarray(rt.slots.block_tbl),
+                      use_paged_kernel=False)
+        return np.asarray(lg)
+
+    emitted_rec, emitted_keep = [], []
+    checked_after_reclaim = False
+    for _ in range(8):
+        d1, d0 = rt_rec.decode(), rt_keep.decode()
+        if d1 is None:
+            assert d0 is None
+            break
+        emitted_rec += d1.emitted.get(0, [])
+        emitted_keep += d0.emitted.get(0, [])
+        if rt_rec.stats["reclaimed_blocks"] and rt_rec.slots.states[0]:
+            st = rt_rec.slots.states[0]
+            assert st.reclaimed > 0
+            assert all(b == -1 for b in st.blocks[: st.reclaimed])
+            assert (rt_rec.slots.block_tbl[0, : st.reclaimed] == -1).all()
+            assert rt_rec.pool.in_use < rt_keep.pool.in_use
+            # live working set bounded by the window, not the sequence:
+            assert rt_rec.pool.in_use <= (8 // 4) + 2
+            np.testing.assert_array_equal(one_gather_step(rt_rec),
+                                          one_gather_step(rt_keep))
+            checked_after_reclaim = True
+    assert checked_after_reclaim, "reclamation never engaged"
+    assert emitted_rec == emitted_keep
+    assert rt_rec.pool.in_use == 0 and rt_keep.pool.in_use == 0
+    assert rt_rec.stats["reclaimed_blocks"] > 0
+
+
+def test_window_reclamation_of_shared_blocks_decrements(small_model):
+    """A shared prompt block sliding out of one slot's window must only
+    drop that slot's reference — the staggered sharer keeps decoding; on
+    drain everything is released exactly once."""
+    cfg, params = small_model
+    swa = cfg.with_(sliding_window=8)
+    rng = np.random.default_rng(17)
+    prompt = rng.integers(0, 512, 8, dtype=np.int32)    # 2 full blocks
+
+    scfg = ServingConfig(num_slots=2, block_size=4, num_blocks=32,
+                         max_blocks_per_slot=8, prefill_buckets=(16,),
+                         prefill_group=2, decode_chunk=4)
+    rt = ContinuousRuntime(swa, params, scfg)
+    r0 = rt.try_admit([(_req(0, 8, 20), prompt, 0)])
+    rt.decode()
+    rt.decode()                          # slot 0 runs ahead of the sharer
+    r1 = rt.try_admit([(_req(1, 8, 20), prompt, 0)])
+    assert r1.shared_blocks[0] >= 1
+    _drain(rt)
+    assert rt.slots.num_active == 0 and rt.pool.in_use == 0
+    assert rt.stats["reclaimed_blocks"] > 0
+    assert r0.slot_ids[0] != r1.slot_ids[0]
+
+
+def test_prefix_cache_eviction_under_pool_pressure(small_model):
+    """Cached prompt blocks are capacity: a pool too small to hold every
+    retired prefix evicts LRU-first and the trie forgets the mapping —
+    later identical prompts just re-prefill (no stale match, no crash)."""
+    cfg, params = small_model
+    rng = np.random.default_rng(19)
+    p_a = rng.integers(0, 512, 16, dtype=np.int32)
+    p_b = rng.integers(0, 512, 16, dtype=np.int32)
+    scfg = ServingConfig(num_slots=2, block_size=8, num_blocks=5,
+                         max_blocks_per_slot=3, prefill_buckets=(16,),
+                         prefill_group=2, decode_chunk=4)
+    rt = ContinuousRuntime(cfg, params, scfg)     # 4 usable blocks: one
+    #   request needs 3, so A's cached prefix cannot coexist with B live
+    rt.try_admit([(_req(0, 16, 6), p_a, 0)])
+    _drain(rt)
+    assert rt.pool.num_cached == 2
+    rt.try_admit([(_req(1, 16, 6), p_b, 0)])      # evicts A's cached blocks
+    _drain(rt)
+    r2 = rt.try_admit([(_req(2, 16, 6), p_a, 0)])
+    assert r2.shared_blocks[0] <= 1               # A's chain was evicted
+    _drain(rt)
+    assert rt.pool.in_use == 0
+    assert len(rt.prefix) == rt.pool.num_cached
+
+
+def test_runtime_reset_path_raises_with_live_slots(small_model):
+    cfg, params = small_model
+    rt = _mk_rt(cfg, params)
+    rng = np.random.default_rng(23)
+    rt.try_admit([(_req(0, 16, 8), rng.integers(0, 512, 16,
+                                                dtype=np.int32), 0)])
+    with pytest.raises(RuntimeError):
+        rt.pool.reset()                  # live slot still maps its blocks
+    _drain(rt)
+    rt.pool.reset()                      # drained: cached blocks evicted
+    assert len(rt.prefix) == 0 and rt.pool.available == 31

@@ -1,7 +1,6 @@
 """C2–C4 + simulator: PCKP greedy vs exact oracle, batching equations,
 offloader invariants, traces, cost meter — including hypothesis property
 tests on the schedulers."""
-import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 

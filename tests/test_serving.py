@@ -52,13 +52,13 @@ def test_block_pool_free_is_atomic():
     pool exactly as it was — no partial mutation for callers that catch."""
     pool = BlockPool(num_blocks=8, block_size=4)
     a = pool.alloc(3)
-    snap = (list(pool._free), set(pool._in_use))
+    snap = (list(pool._free), dict(pool._ref))
     with pytest.raises(KeyError):
         pool.free([a[0], a[1], 99])       # valid prefix + foreign id
-    assert (list(pool._free), set(pool._in_use)) == snap
+    assert (list(pool._free), dict(pool._ref)) == snap
     with pytest.raises(KeyError):
         pool.free([a[0], a[0]])           # duplicate in one call
-    assert (list(pool._free), set(pool._in_use)) == snap
+    assert (list(pool._free), dict(pool._ref)) == snap
     pool.free(a)                          # the valid free still works
     assert pool.in_use == 0 and pool.available == 7
 

@@ -1,7 +1,6 @@
 """Sharding-policy invariants (divisibility, replication of small leaves)
 and roofline bookkeeping (collective parsing, scan-depth correction)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st

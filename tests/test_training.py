@@ -9,8 +9,8 @@ from repro.data.pipeline import lm_batches, synthetic_corpus
 from repro.models import transformer as tf
 from repro.models.config import LoRAConfig, ModelConfig
 from repro.training.adamw import AdamW, constant_schedule, cosine_schedule
-from repro.training.train import (cross_entropy, make_full_train_step,
-                                  make_lora_train_step, train_loop)
+from repro.training.train import (cross_entropy, make_lora_train_step,
+                                  train_loop)
 
 CFG = ModelConfig(name="tiny", family="dense", num_layers=2, d_model=64,
                   num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
