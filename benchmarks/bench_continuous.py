@@ -154,12 +154,12 @@ def run(adapters: int = 3, rate: float = 200.0, duration: float = 1.0,
                         fixed_batch=fixed_batch, fixed_delay=0.03, seed=seed)
 
     scfg = ServingConfig(num_slots=slots, block_size=8, num_blocks=128,
-                         max_blocks_per_slot=8, prefill_buckets=(PROMPT_LEN,),
-                         prefill_group=4, decode_chunk=8)
+                         max_blocks_per_slot=8, prefill_chunk=PROMPT_LEN,
+                         decode_chunk=8)
     rt = ContinuousRuntime(cfg, params, scfg)
     cont, _ = replay_trace(rt, [dict(w) for w in wl],
                            {f"fn{a}": a for a in range(adapters)}, seed=seed,
-                           slo_abandon=False)
+                           prefill_group=4, slo_abandon=False)
 
     rows = {}
     for res in (static, cont):
@@ -181,8 +181,10 @@ def run(adapters: int = 3, rate: float = 200.0, duration: float = 1.0,
     speedup = rows["continuous-real"]["tok_per_s"] / \
         max(rows["static-fixed-batch"]["tok_per_s"], 1e-9)
     compiles = rt.decode_compiles()
+    pf_compiles = rt.prefill_compiles()
     print(f"\ncontinuous/static throughput: {speedup:.2f}x")
-    print(f"decode compiles after warmup: {compiles}")
+    print(f"decode compiles after warmup: {compiles}, "
+          f"prefill compiles: {pf_compiles}")
     # throughput comparison is only meaningful under backlog: when both
     # systems drain arrivals in real time, tok/s is arrival-limited on both
     # sides and the ratio is measurement noise around 1.0
@@ -199,6 +201,8 @@ def run(adapters: int = 3, rate: float = 200.0, duration: float = 1.0,
               "--rate for the saturating comparison")
     assert compiles in (1, -1), \
         f"decode step re-jitted mid-serving ({compiles} cache entries)"
+    assert pf_compiles in (1, -1), \
+        f"chunked prefill re-jitted mid-serving ({pf_compiles} entries)"
     return rows
 
 
@@ -207,5 +211,14 @@ if __name__ == "__main__":
     ap.add_argument("--rate", type=float, default=200.0)
     ap.add_argument("--duration", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--quick", action="store_true",
+                    help="short low-rate trace + small static batch for "
+                         "CI smoke (same correctness/compile assertions; "
+                         "the throughput gate already self-disables when "
+                         "the trace is arrival-limited)")
     args = ap.parse_args()
-    run(rate=args.rate, duration=args.duration, seed=args.seed)
+    if args.quick:
+        run(rate=40.0, duration=0.5, seed=args.seed, slots=4,
+            fixed_batch=2)
+    else:
+        run(rate=args.rate, duration=args.duration, seed=args.seed)

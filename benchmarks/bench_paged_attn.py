@@ -142,9 +142,8 @@ def bench_serving(rate: float, duration: float, seed: int,
     out = {"requests": len(wl), "window": sliding_window}
     for use_kernel in (False, True):
         scfg = ServingConfig(num_slots=8, block_size=8, num_blocks=64,
-                             max_blocks_per_slot=6, prefill_buckets=(16,),
-                             prefill_group=2, decode_chunk=4,
-                             use_kernel=use_kernel)
+                             max_blocks_per_slot=6, prefill_chunk=16,
+                             decode_chunk=4, use_kernel=use_kernel)
         rt = ContinuousRuntime(cfg, params, scfg)
         res, _ = replay_trace(rt, [dict(w) for w in wl],
                               {f"fn{i}": i for i in range(3)},

@@ -1,0 +1,294 @@
+"""Chunked paged prefill vs the legacy bucket+scatter join path.
+
+The paper's TTFT claim (§5) hinges on doing no redundant work at request
+start.  The legacy join right-padded every prompt to a fixed bucket,
+prefilled a throwaway contiguous cache, and scattered it into pool blocks
+— padded FLOPs, a second full-prompt HBM round trip, and one compiled
+variant per bucket.  Chunked paged prefill writes K/V straight into pool
+blocks in fixed ``prefill_chunk`` slices.  Four measurements, one per
+claim (all asserted; ``--quick`` keeps b/c/d and skips the perf gate a):
+
+* **(a) cold-start TTFT drops on a padded-prompt mix** — time from a cold
+  runtime to every first token over a mixed-length prompt set.  Serverless
+  TTFT *is* cold-start TTFT (the paper's §5 86% claim): the legacy path
+  pays one compile per bucket at warmup before the first request can be
+  served; chunked prefill compiles ONE shape.  Chunked total (warmup +
+  joins) must be <= legacy total.  Steady-state join latency is reported
+  separately and unasserted: at CPU-microbench shapes the chunk loop's
+  extra dispatches cost more than bucket padding saves (on TPU the Pallas
+  kernel prunes future blocks in-grid and dispatch overhead is noise).
+* **(b) recomputed tokens strictly drop on a shared-prefix trace** — PR 3
+  skipped only the *insert* of shared blocks; the chunk loop starts at
+  the first uncovered token, so ``stats["recomputed_tokens"]`` must fall
+  strictly below ``stats["prompt_tokens"]`` (what the bucketed path
+  recomputed).
+* **(c) a prompt longer than the old largest bucket is served** — prompt
+  length is capped by the block table now, not the bucket set.
+* **(d) exactly one prefill compile** — across every prompt length in the
+  mix (the bucket set compiled one variant per bucket, all paid at
+  cold-start warmup; the measured warmup gap is reported).
+
+Bytes moved (one prompt of L tokens, P = prompt pool bytes): legacy
+writes the contiguous cache (P, at bucket length >= L), reads it back and
+writes the pool in the scatter (2P more) = 3 passes over >= P; chunked
+writes the pool once = P.  The padded-FLOPs ratio is bucket/L on top.
+
+Run: PYTHONPATH=src python -m benchmarks.bench_paged_prefill [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import statistics
+import time
+from typing import Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core.engine import make_insert_fn, make_prefill_step
+from repro.models import transformer as tf
+from repro.models.cache import GARBAGE_BLOCK, init_paged_cache
+from repro.serverless.batching import Request
+from repro.serverless.traces import TraceSpec, make_workload
+from repro.serving import ContinuousRuntime, ServingConfig, replay_trace
+
+BLOCK = 8
+
+
+def _legacy_join(cfg, buckets: Sequence[int]):
+    """The retired join path as one jitted fn per bucket: bucketed
+    contiguous prefill + slot-wise block scatter (two passes over the
+    prompt's KV bytes), exactly what ``ContinuousRuntime`` ran before."""
+    prefill = make_prefill_step(cfg)
+    insert = make_insert_fn(cfg, BLOCK)
+
+    def join(bucket):
+        def fn(params, tokens, last_pos, ai, pool, ids):
+            cache = tf.init_cache(cfg, 1, bucket, clamp_window=False)
+            lg, cache = prefill(params, tokens, cache, adapter_idx=ai,
+                                last_pos=last_pos)
+            return lg, insert(pool, cache, ids)
+        return jax.jit(fn, donate_argnums=(4,))
+
+    return {b: join(b) for b in buckets}
+
+
+def bench_ttft(cfg, params, lengths: Sequence[int], buckets: Sequence[int],
+               chunk: int, repeats: int) -> Dict:
+    """Cold-start TTFT (warmup compiles + join of the whole mix) and
+    steady-state join latency, both paths.  Legacy pays one compiled
+    variant per bucket, bucket-padded FLOPs, and the scatter pass;
+    chunked pays ONE compile and ceil(L/chunk) fixed-shape dispatches
+    writing pool blocks directly."""
+    MB = 17
+    NB = 128
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, L, dtype=np.int32)
+               for L in lengths]
+    legacy = _legacy_join(cfg, buckets)
+    scfg = ServingConfig(num_slots=2, block_size=BLOCK, num_blocks=NB,
+                         max_blocks_per_slot=MB, prefill_chunk=chunk,
+                         prefill_rows=1, decode_chunk=4,
+                         prefix_sharing=False)   # per-request TTFT mix:
+    #   singleton admits, so the one-row shape is the natural width
+    rt = ContinuousRuntime(cfg, params, scfg)
+
+    pool = init_paged_cache(cfg, NB, BLOCK)
+    ai = jnp.zeros((1,), jnp.int32)
+
+    def run_legacy() -> float:
+        nonlocal pool
+        t0 = time.perf_counter()
+        for p in prompts:
+            L = len(p)
+            bucket = next(b for b in sorted(buckets) if L <= b)
+            tok = np.zeros((1, bucket), np.int32)
+            tok[0, :L] = p
+            ids = jnp.full((1, bucket // BLOCK), GARBAGE_BLOCK, jnp.int32)
+            lg, pool = legacy[bucket](params, jnp.asarray(tok),
+                                      jnp.asarray([L - 1], jnp.int32), ai,
+                                      pool, ids)
+            np.asarray(lg)              # TTFT: block per request
+        return time.perf_counter() - t0
+
+    def run_chunked() -> float:
+        t0 = time.perf_counter()
+        for p in prompts:
+            rt._chunk_prefill([(p, 0, [], 0)])  # garbage ids: perf-only
+        return time.perf_counter() - t0
+
+    # cold start: the first request cannot be served before its shape has
+    # compiled — the legacy path must warm EVERY bucket (a mixed-length
+    # service hits them all), chunked prefill warms one
+    t0 = time.perf_counter()
+    rt._chunk_prefill([(np.zeros((chunk,), np.int32), 0, [], 0)])
+    warm_chunked = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for b in buckets:
+        ids = jnp.full((1, b // BLOCK), GARBAGE_BLOCK, jnp.int32)
+        lg, pool = legacy[b](params, jnp.zeros((1, b), jnp.int32),
+                             jnp.zeros((1,), jnp.int32), ai, pool, ids)
+        np.asarray(lg)
+    warm_legacy = time.perf_counter() - t0
+
+    t_legacy = statistics.median(run_legacy() for _ in range(repeats))
+    t_chunked = statistics.median(run_chunked() for _ in range(repeats))
+    return {
+        "legacy_s": t_legacy, "chunked_s": t_chunked,
+        "cold_legacy_s": warm_legacy + t_legacy,
+        "cold_chunked_s": warm_chunked + t_chunked,
+        "warm_legacy_s": warm_legacy, "warm_chunked_s": warm_chunked,
+        "legacy_compiles": len(buckets),
+        "chunked_compiles": rt.prefill_compiles(),
+        "padded_tokens": sum(
+            next(b for b in sorted(buckets) if len(p) <= b) - len(p)
+            for p in prompts),
+        "prompt_tokens": sum(lengths),
+    }
+
+
+def bench_shared_prefix(cfg, params, rate: float, duration: float,
+                        seed: int) -> Dict:
+    """Shared-system-prompt trace: recomputed tokens must strictly drop vs
+    the PR 3 insert-skip-only behavior (== all prompt tokens)."""
+    sys_len, prompt_len = 16, 24
+    specs = [TraceSpec(f"fn{i}", "bursty", rate, duration,
+                       prompt_len=prompt_len, output_len=8, slo_ttft=30.0)
+             for i in range(2)]
+    wl = make_workload(specs, seed=seed)
+    rng = np.random.default_rng(seed)
+    sys_p = {f"fn{i}": rng.integers(0, cfg.vocab_size, sys_len,
+                                    dtype=np.int32) for i in range(2)}
+    prompts = {w["req_id"]: np.concatenate(
+        [sys_p[w["fn_id"]],
+         rng.integers(0, cfg.vocab_size, prompt_len - sys_len,
+                      dtype=np.int32)]) for w in wl}
+    scfg = ServingConfig(num_slots=8, block_size=BLOCK, num_blocks=96,
+                         max_blocks_per_slot=8, prefill_chunk=16,
+                         decode_chunk=4)
+    rt = ContinuousRuntime(cfg, params, scfg)
+    res, _ = replay_trace(rt, [dict(w) for w in wl],
+                          {f"fn{i}": i for i in range(2)},
+                          slo_abandon=False, prompts=prompts)
+    served = [r for r in res.requests if r.first_token >= 0]
+    assert served, "nothing served"
+    assert rt.slots.num_active == 0 and rt.pool.in_use == 0
+    # side-effect-free TTFT estimate for the NEXT identical prompt: the
+    # resident cover (still parked in the cached LRU after drain) is what
+    # a fresh admit's chunk loop would skip
+    probe = prompts[served[0].req_id]
+    resident = rt.prefix.covered_tokens(0, probe)
+    return {"served": len(served), "resident_cover": resident, **rt.stats}
+
+
+def bench_long_prompt(cfg, params, old_largest_bucket: int) -> Dict:
+    """A prompt longer than the old largest bucket round-trips through
+    admission + decode (the bucketed path raised at ``bucket_for``)."""
+    L = old_largest_bucket + 32
+    scfg = ServingConfig(num_slots=2, block_size=BLOCK, num_blocks=64,
+                         max_blocks_per_slot=(L + 32) // BLOCK,
+                         prefill_chunk=16, decode_chunk=4)
+    rt = ContinuousRuntime(cfg, params, scfg)
+    rng = np.random.default_rng(1)
+    req = Request(req_id=0, fn_id="fn0", arrival=0.0, prompt_len=L,
+                  output_len=6, slo_ttft=30.0)
+    res = rt.try_admit([(req, rng.integers(0, cfg.vocab_size, L,
+                                           dtype=np.int32), 0)])
+    assert res is not None and res.slot_ids[0] >= 0, "long prompt refused"
+    produced = 1
+    while rt.slots.num_active:
+        d = rt.decode()
+        produced += sum(len(t) for t in d.emitted.values())
+    assert produced == 6 and rt.pool.in_use == 0
+    return {"prompt_len": L, "chunks": rt.stats["prefill_chunks"],
+            "compiles": rt.prefill_compiles()}
+
+
+def run(repeats: int = 5, rate: float = 6.0, duration: float = 3.0,
+        seed: int = 21, quick: bool = False) -> Dict:
+    cfg = get_smoke("llama2_7b").with_(dtype="float32")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg, lora_adapters=3)
+    buckets = (32, 64) if quick else (32, 64, 128)
+    chunk = 32 if quick else 64
+    lengths = [17, 20, 25, 33, 40] if quick else \
+        [33, 40, 66, 70, 80, 90, 97, 100]
+    print(f"backend: {jax.default_backend()}"
+          + (" [--quick: tiny mix, TTFT assertion off]" if quick else ""))
+
+    print("\n== (a) cold-start TTFT on a padded-prompt mix ==")
+    m = bench_ttft(cfg, params, lengths, buckets, chunk, repeats)
+    print(f"prompt mix: {len(lengths)} prompts, {m['prompt_tokens']} real "
+          f"tokens, {m['padded_tokens']} bucket-padding tokens "
+          f"(buckets {buckets}, chunk {chunk})")
+    print(f"legacy bucket+scatter: warmup {m['warm_legacy_s'] * 1e3:6.0f} "
+          f"ms ({m['legacy_compiles']} compiled variants) + mix "
+          f"{m['legacy_s'] * 1e3:6.1f} ms = {m['cold_legacy_s'] * 1e3:6.0f}"
+          f" ms")
+    print(f"chunked paged prefill: warmup {m['warm_chunked_s'] * 1e3:6.0f} "
+          f"ms ({m['chunked_compiles']} compiled variant)  + mix "
+          f"{m['chunked_s'] * 1e3:6.1f} ms = "
+          f"{m['cold_chunked_s'] * 1e3:6.0f} ms")
+    print(f"-> {m['cold_legacy_s'] / m['cold_chunked_s']:.2f}x on "
+          f"cold-start TTFT (steady-state mix ratio "
+          f"{m['legacy_s'] / m['chunked_s']:.2f}x — unasserted: at CPU "
+          f"microbench shapes chunk dispatch overhead outweighs padding; "
+          f"the TPU kernel prunes in-grid)")
+    if quick:
+        # CI smoke guards script rot, not steady-state perf on a noisy
+        # shared runner — the correctness/compile asserts below stay on
+        print("(--quick: cold-start TTFT <= legacy assertion skipped)")
+    else:
+        assert m["cold_chunked_s"] <= m["cold_legacy_s"], (
+            f"chunked prefill lost to the bucketed path from cold start "
+            f"({m['cold_chunked_s']:.3f}s vs {m['cold_legacy_s']:.3f}s)")
+
+    print("\n== (b) shared-system-prompt trace: recompute skipping ==")
+    s = bench_shared_prefix(cfg, params, rate, duration, seed)
+    print(f"{s['served']} served; prompt tokens {s['prompt_tokens']}, "
+          f"recomputed {s['recomputed_tokens']}, shared-covered "
+          f"{s['shared_tokens']}, inserted {s['prefill_tokens']}")
+    assert s["recomputed_tokens"] < s["prompt_tokens"], (
+        "chunked prefill recomputed every prompt token — PR 3 "
+        "(insert-skip only) already did that "
+        f"({s['recomputed_tokens']} vs {s['prompt_tokens']})")
+    saved = s["prompt_tokens"] - s["recomputed_tokens"]
+    print(f"-> {saved} prompt tokens "
+          f"({100.0 * saved / s['prompt_tokens']:.0f}%) never recomputed "
+          f"(PR 3 skipped only their insert)")
+    assert s["resident_cover"] > 0, "prefix index empty after the trace"
+    print(f"   a repeat of the last served prompt would skip "
+          f"{s['resident_cover']} tokens (prefix.covered_tokens probe)")
+
+    print("\n== (c) prompt longer than the old largest bucket ==")
+    lp = bench_long_prompt(cfg, params, max(buckets))
+    print(f"prompt {lp['prompt_len']} > bucket {max(buckets)}: served in "
+          f"{lp['chunks']} chunk dispatches, compiles={lp['compiles']}")
+
+    print("\n== (d) compile-once across all prompt lengths ==")
+    assert m["chunked_compiles"] in (1, -1), (
+        f"chunked prefill compiled {m['chunked_compiles']} variants")
+    assert lp["compiles"] in (1, -1)
+    print(f"chunked prefill: 1 compile for lengths {min(lengths)}.."
+          f"{lp['prompt_len']} (legacy: {m['legacy_compiles']} — one per "
+          f"bucket, all paid at cold-start warmup)")
+    return {"ttft": m, "shared": s, "long": lp}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--rate", type=float, default=6.0)
+    ap.add_argument("--duration", type=float, default=3.0)
+    ap.add_argument("--seed", type=int, default=21)
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny mix + short trace for CI smoke; keeps the "
+                         "correctness/compile assertions, skips the perf "
+                         "one")
+    a = ap.parse_args()
+    if a.quick:
+        run(repeats=2, rate=4.0, duration=1.5, seed=a.seed, quick=True)
+    else:
+        run(repeats=a.repeats, rate=a.rate, duration=a.duration,
+            seed=a.seed)

@@ -56,9 +56,9 @@ def shared_prefix_prompts(workload: Sequence[Dict], vocab: int,
 def run_replay(cfg, params, workload, prompts, fn_adapter, *,
                sharing: bool, reclaim: bool) -> Dict:
     scfg = ServingConfig(num_slots=8, block_size=8, num_blocks=96,
-                         max_blocks_per_slot=8, prefill_buckets=(32,),
-                         prefill_group=2, decode_chunk=4,
-                         prefix_sharing=sharing, window_reclamation=reclaim)
+                         max_blocks_per_slot=8, prefill_chunk=16,
+                         decode_chunk=4, prefix_sharing=sharing,
+                         window_reclamation=reclaim)
     rt = ContinuousRuntime(cfg, params, scfg)
     res, _ = replay_trace(rt, [dict(w) for w in workload], fn_adapter,
                           slo_abandon=False, prompts=prompts)
@@ -83,6 +83,7 @@ def run_replay(cfg, params, workload, prompts, fn_adapter, *,
 
 def _report(label: str, m: Dict) -> None:
     print(f"{label:26s} prefill tok {m['prefill_tokens']:6d}  "
+          f"recomputed {m['recomputed_tokens']:6d}  "
           f"shared tok {m['shared_tokens']:6d}  "
           f"high-water {m['high_water']:4d} blocks  "
           f"reclaimed {m['reclaimed_blocks']:4d}  "

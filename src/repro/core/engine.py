@@ -35,6 +35,33 @@ def make_prefill_step(cfg: ModelConfig):
     return prefill_step
 
 
+def make_chunked_prefill_step(cfg: ModelConfig):
+    """One fixed-shape slice of chunked paged prefill — the serving join
+    path.  Processes ``tokens`` (B, C) at absolute positions ``start[b] +
+    [0, C)``, writing K/V straight into pool blocks (``chunk_ids``:
+    (B, C//bs) physical ids per chunk-local logical block; garbage-block
+    entries skip the write) and attending over each row's full paged
+    history via ``block_tbl`` (B, MB).  ``last_idx``: (B,) in-chunk index
+    whose logit to return (the caller clamps ``last_pos - start`` into
+    [0, C)).  Returns ((B, V) logits, updated pool cache).
+
+    Replaces the bucketed prefill + scatter join (make_prefill_step +
+    make_insert_fn): one HBM pass instead of two, no contiguous bucket
+    cache, no padded-bucket FLOPs, and ONE compiled shape for every
+    prompt length."""
+
+    def chunked_prefill_step(params, tokens, start, last_idx, cache,
+                             chunk_ids, block_tbl, *, adapter_idx=None,
+                             use_paged_kernel=False):
+        logits, cache, _ = tf.forward(
+            params, cfg, tokens, cache=cache, adapter_idx=adapter_idx,
+            start_pos=start, last_pos=last_idx, block_tbl=block_tbl,
+            chunk_ids=chunk_ids, use_paged_kernel=use_paged_kernel)
+        return logits[:, -1], cache
+
+    return chunked_prefill_step
+
+
 def make_serve_step(cfg: ModelConfig):
     """ONE-token decode against an existing cache — the unit the decode
     input shapes lower (decode_32k / long_500k).  With a paged cache,
@@ -55,14 +82,13 @@ def make_insert_fn(cfg: ModelConfig, block_size: int):
     """Slot-wise cache *insert*: scatter a prefilled contiguous cache into
     pool blocks.  ``block_ids``: (G, nb) int32 physical block ids per row —
     entries equal to the garbage block (0) are *skipped* (their slab lands
-    in the garbage block, which the decode mask never reads).  The serving
-    runtime uses that skip for two things: right-padding junk past a row's
-    prompt, and prompt blocks covered by cross-request prefix sharing —
-    a shared physical block is written exactly once, by the request that
-    first registered it, so rows of one group never race on a block the
-    scatter would otherwise write twice (``.at[].set`` with duplicate
-    destinations is order-nondeterministic).  Returns a pure fn to be
-    jitted by the caller: (pool_cache, prefill_cache, block_ids) ->
+    in the garbage block, which the decode mask never reads): right-padding
+    junk past a row's prompt, and prefix-shared blocks an earlier request
+    already wrote.  RETIRED from the serving join path by chunked paged
+    prefill (``make_chunked_prefill_step`` writes pool blocks directly);
+    kept for tests and migration — it is the legacy bucket+scatter oracle
+    the chunked path is proven bitwise-equal against.  Returns a pure fn
+    to be jitted by the caller: (pool_cache, prefill_cache, block_ids) ->
     pool_cache."""
 
     def insert_layer(pool_l, pre_l, block_ids, stacked):

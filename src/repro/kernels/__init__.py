@@ -35,6 +35,8 @@ KERNEL_REGISTRY = {
     "decode_attention": ("repro.kernels.decode_attention.ops", "decode_gqa"),
     "paged_attention": ("repro.kernels.paged_attention.ops",
                         "paged_decode_gqa"),
+    "paged_prefill": ("repro.kernels.paged_prefill.ops",
+                      "paged_prefill_gqa"),
     "sgmv": ("repro.kernels.sgmv.ops", "sgmv_apply"),
 }
 

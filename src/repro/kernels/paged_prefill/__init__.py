@@ -1,0 +1,3 @@
+# Chunked paged prefill attention: prefill_attn.py (Pallas in-kernel
+# block-table walk over a q-chunk), ref.py (gather oracle, bucketed-path
+# bitwise-compatible), ops.py (TPU / fused-jnp / interpret dispatch).

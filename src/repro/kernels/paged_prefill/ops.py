@@ -1,0 +1,82 @@
+"""Dispatch wrapper for chunked paged prefill attention.
+
+``use_kernel=True`` picks the fastest block-table walk for the current
+backend: the Pallas TPU kernel (in-kernel table walk, no gathered K/V, no
+mask tensor in HBM, future/stale kv steps pruned) on TPU, or a fused jnp
+block walk off-TPU that keeps the blocked (K, B, MB, bs, hd) operand
+layout end-to-end.  ``use_kernel=False`` is the plain gather reference
+(``ref.py`` — the exact ops of the legacy bucketed prefill path, for the
+bitwise-equivalence tests).  ``interpret=True`` forces the Pallas kernel
+in interpret mode so CPU tests exercise the real kernel logic.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_prefill.prefill_attn import paged_prefill_attention
+from repro.kernels.paged_prefill.ref import paged_prefill_ref
+
+NEG_INF = -1e30
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _paged_prefill_jnp(q, kp, vp, block_tbl, q_pos, *,
+                       window: Optional[int] = None):
+    """Fused jnp block walk: same math as the kernel, blocked layout kept
+    throughout (the XLA analogue of the in-kernel walk)."""
+    B, C, H, hd = q.shape
+    K, _, bs, _ = kp.shape
+    G = H // K
+    MB = block_tbl.shape[1]
+    phys = jnp.maximum(block_tbl, 0)
+    kb = kp[:, phys]                                 # (K, B, MB, bs, hd)
+    vb = vp[:, phys]
+    qg = q.reshape(B, C, K, G, hd)
+    s = jnp.einsum("bckgh,kbmsh->bkgcms", qg.astype(jnp.float32),
+                   kb.astype(jnp.float32)) / math.sqrt(hd)
+    kpos = jnp.arange(MB)[:, None] * bs + jnp.arange(bs)[None, :]
+    qp = q_pos[:, :, None, None]                     # (B, C, 1, 1)
+    ok = (kpos[None, None] <= qp) & \
+        (block_tbl[:, None, :, None] >= 0)
+    if window is not None:
+        ok = ok & (kpos[None, None] > qp - window)
+    s = jnp.where(ok[:, None, None], s, NEG_INF)     # (B, K, G, C, MB, bs)
+    sf = s.reshape(B, K, G, C, MB * bs)
+    m = jnp.max(sf, axis=-1, keepdims=True)
+    p = jnp.exp(sf - m)
+    w = (p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+         ).reshape(B, K, G, C, MB, bs)
+    o = jnp.einsum("bkgcms,kbmsh->bckgh", w, vb.astype(jnp.float32))
+    return o.reshape(B, C, H, hd).astype(q.dtype)
+
+
+def paged_prefill_gqa(q, kp, vp, block_tbl, q_pos, *,
+                      window: Optional[int] = None, q_block: int = 256,
+                      s_block: int = 512, use_kernel: bool = True,
+                      interpret: Optional[bool] = None):
+    """q: (B, C, H, hd); kp, vp: (K, NB, bs, hd) pools already holding the
+    chunk's K/V (write-before-attend); block_tbl: (B, MB) int32; q_pos:
+    (B, C) int32 contiguous ascending absolute positions (the Pallas path
+    derives them from ``q_pos[:, 0]``).  Returns (B, C, H, hd)."""
+    if not use_kernel:
+        return paged_prefill_ref(q, kp, vp, block_tbl, q_pos, window=window)
+    if interpret is None:
+        if not _on_tpu():
+            return _paged_prefill_jnp(q, kp, vp, block_tbl, q_pos,
+                                      window=window)
+        interpret = False
+    B, C, H, hd = q.shape
+    K = kp.shape[0]
+    qk = q.reshape(B, C, K, H // K, hd).transpose(0, 2, 3, 1, 4)
+    o = paged_prefill_attention(qk, kp, vp, block_tbl,
+                                q_pos[:, 0].astype(jnp.int32), window=window,
+                                q_block=q_block, s_block=s_block,
+                                interpret=interpret)
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, C, H, hd)

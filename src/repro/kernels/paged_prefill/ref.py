@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for chunked paged prefill attention.
+
+Contract (write-before-attend): by the time attention runs, the chunk's
+K/V have already been written into the pool blocks its block-table row
+maps, so the oracle is a pure gather — materialize each row's logical K/V
+view through the table and mask by absolute position.  Logical key index
+== absolute token position, so ONE causal rule ``kpos <= qpos`` covers
+both the paged history (earlier chunks, prefix-shared blocks) and
+in-chunk causality; -1 table entries clip onto the garbage block for the
+gather and are masked out; sliding-window configs additionally mask
+``kpos <= qpos - window``.
+
+The heavy math is deliberately the *same ops* as the legacy bucketed
+prefill path (``models.layers.attention_core`` behind an additive
+``0 / -1e30`` mask): masked-out logical slots contribute exact zeros
+after the softmax exp, so chunked-paged prefill can be compared BITWISE
+against the bucketed reference (``tests/test_paged_prefill.py``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.models.layers import attention_core
+
+
+def paged_prefill_ref(q, kp, vp, block_tbl, q_pos, *,
+                      window: Optional[int] = None):
+    """q: (B, C, H, hd) chunk queries; kp, vp: (K, NB, bs, hd) block pools
+    (chunk K/V already written); block_tbl: (B, MB) int32 (-1 =
+    unallocated); q_pos: (B, C) int32 absolute query positions.
+    Returns (B, C, H, hd)."""
+    B, C, H, hd = q.shape
+    K, _, bs, _ = kp.shape
+    MB = block_tbl.shape[1]
+    phys = jnp.maximum(block_tbl, 0)                 # -1 -> garbage block
+    # (K, B, MB, bs, hd) -> (B, MB*bs, K, hd) logical view
+    k = kp[:, phys].transpose(1, 2, 3, 0, 4).reshape(B, MB * bs, K, hd)
+    v = vp[:, phys].transpose(1, 2, 3, 0, 4).reshape(B, MB * bs, K, hd)
+    kpos = jnp.arange(MB * bs)[None, None, :]        # logical idx == position
+    qp = q_pos[:, :, None]
+    ok = (kpos <= qp) & (block_tbl[:, kpos[0, 0] // bs] >= 0)[:, None, :]
+    if window is not None:
+        ok = ok & (kpos > qp - window)
+    mask = jnp.where(ok, 0.0, -1e30).astype(jnp.float32)   # (B, C, MB*bs)
+    return attention_core(q, k, v, mask)

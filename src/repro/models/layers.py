@@ -228,18 +228,26 @@ def apply_attention(p: Params, cfg: ModelConfig, x, *, positions,
                     mask_kind: str = "causal", prefix_len: int = 0,
                     window: Optional[int] = None, adapter_idx=None,
                     use_chunked: bool = False, use_rope: bool = True,
-                    block_tbl=None, use_paged_kernel: bool = False):
+                    block_tbl=None, chunk_ids=None,
+                    use_paged_kernel: bool = False):
     """GQA attention with optional KV cache (decode) and cross-attention.
 
     x: (B, T, D). positions: (T,) or (B, T) absolute positions of x tokens.
     cache: {"k","v": (B, S, K, hd), "slot_pos": (S,) int32, "idx": ()} — decode
     writes one token at rolling slot idx % S and attends over the cache.
     Paged cache (serving): {"kp","vp": (K, NB, bs, hd)} block pools shared by
-    all rows, addressed through ``block_tbl`` (B, MB) int32 — each row writes
-    its token at block_tbl[b, pos//bs] offset pos%bs, then attends over its
-    own blocks: with ``use_paged_kernel`` the Pallas paged-attention kernel
-    (or its fused jnp fallback off-TPU) walks the block table in-kernel; the
-    reference path gathers a (B, MB*bs) view instead.  -1 table entries clip
+    all rows, addressed through ``block_tbl`` (B, MB) int32.  T == 1 is
+    decode: each row writes its token at block_tbl[b, pos//bs] offset
+    pos%bs, then attends over its own blocks: with ``use_paged_kernel`` the
+    Pallas paged-attention kernel (or its fused jnp fallback off-TPU) walks
+    the block table in-kernel; the reference path gathers a (B, MB*bs) view
+    instead.  T > 1 is chunked paged *prefill*: the chunk's K/V is written
+    straight into whole pool blocks (``chunk_ids``: (B, T//bs) physical ids
+    per chunk-local logical block; garbage-block entries skip — bucket-free
+    join path, no contiguous cache + scatter), then the chunk's queries
+    attend over the row's entire paged history through the table (logical
+    key index == absolute position, so one causal rule covers prefix-shared
+    blocks, earlier chunks, and in-chunk causality).  -1 table entries clip
     onto the reserved garbage block 0 and are masked out by position/table
     validity.
     kv_x: encoder output for cross-attention (keys/values from it, no cache).
@@ -267,6 +275,28 @@ def apply_attention(p: Params, cfg: ModelConfig, x, *, positions,
         k = rope(k, positions, cfg.rope_theta)
 
     new_cache = cache
+    if cache is not None and "kp" in cache and kv_x is None and T > 1:
+        # Chunked paged prefill: write the chunk's K/V straight into pool
+        # blocks (whole block-aligned slabs; garbage-id entries land in the
+        # garbage block, i.e. are skipped — prefix-shared blocks already
+        # hold exactly these values, out-of-range blocks are junk padding),
+        # then attend over the updated pool through the block table.
+        assert block_tbl is not None, "paged prefill requires block_tbl"
+        assert chunk_ids is not None, "paged prefill requires chunk_ids"
+        bs = cache["kp"].shape[2]
+        assert T % bs == 0, "prefill chunk must cover whole blocks"
+        nb_c = T // bs
+        kr = k.reshape(B, nb_c, bs, K, hd).transpose(3, 0, 1, 2, 4)
+        vr = v.reshape(B, nb_c, bs, K, hd).transpose(3, 0, 1, 2, 4)
+        kp = cache["kp"].at[:, chunk_ids].set(kr.astype(cache["kp"].dtype))
+        vp = cache["vp"].at[:, chunk_ids].set(vr.astype(cache["vp"].dtype))
+        new_cache = {"kp": kp, "vp": vp}
+        from repro.kernels.paged_prefill.ops import paged_prefill_gqa
+        out = paged_prefill_gqa(q, kp, vp, block_tbl, positions,
+                                window=window, use_kernel=use_paged_kernel)
+        out = dense(out.reshape(B, T, H * hd), p["wo"], lora.get("o"),
+                    scaling=s, adapter_idx=adapter_idx)
+        return out, new_cache
     if cache is not None and "kp" in cache and kv_x is None:
         # Paged decode: per-row single-token write into the block pool, then
         # attend over the row's blocks (in-kernel table walk or the gather

@@ -173,14 +173,15 @@ def _cross_attention(lp: Params, cfg: ModelConfig, h, enc_out, cache):
 def _apply_layer(kind: str, lp: Params, cfg: ModelConfig, x, *, positions,
                  cache, mask_kind: str, prefix_len: int, adapter_idx,
                  enc_out, use_chunked: bool, fill_cache: bool,
-                 block_tbl=None, use_paged_kernel: bool = False):
+                 block_tbl=None, chunk_ids=None,
+                 use_paged_kernel: bool = False):
     """One residual block. Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     h = apply_norm(x, lp["norm1"], cfg.norm_type)
     new_cache = cache
     if kind == ATTN:
         T = h.shape[1]
-        ring_overflow = (cache is not None and fill_cache
+        ring_overflow = (cache is not None and fill_cache and "k" in cache
                          and T > cache["k"].shape[1])
         attn_cache_in = None if (cache is None or ring_overflow) else cache
         mix, upd = apply_attention(
@@ -188,7 +189,7 @@ def _apply_layer(kind: str, lp: Params, cfg: ModelConfig, x, *, positions,
             mask_kind=mask_kind, prefix_len=prefix_len,
             window=cfg.sliding_window, adapter_idx=adapter_idx,
             use_chunked=use_chunked, use_rope=True, block_tbl=block_tbl,
-            use_paged_kernel=use_paged_kernel)
+            chunk_ids=chunk_ids, use_paged_kernel=use_paged_kernel)
         if ring_overflow:
             # SWA prefill longer than the window: keep only the last Tc K/V.
             from repro.models.layers import dense, rope
@@ -276,7 +277,8 @@ def encode(params: Params, cfg: ModelConfig, frame_embeds) -> jnp.ndarray:
 # -------------------------------------------------------------------- forward
 def _run_stack(params, cfg: ModelConfig, x, *, positions, cache, mask_kind,
                prefix_len, adapter_idx, enc_out, use_chunked, fill_cache,
-               remat: bool, block_tbl=None, use_paged_kernel: bool = False):
+               remat: bool, block_tbl=None, chunk_ids=None,
+               use_paged_kernel: bool = False):
     pat = cfg.pattern
     aux_total = jnp.zeros((), jnp.float32)
 
@@ -291,7 +293,8 @@ def _run_stack(params, cfg: ModelConfig, x, *, positions, cache, mask_kind,
                 mask_kind=mask_kind, prefix_len=prefix_len,
                 adapter_idx=adapter_idx, enc_out=enc_out,
                 use_chunked=use_chunked, fill_cache=fill_cache,
-                block_tbl=block_tbl, use_paged_kernel=use_paged_kernel)
+                block_tbl=block_tbl, chunk_ids=chunk_ids,
+                use_paged_kernel=use_paged_kernel)
             new_cs[f"p{j}"] = nc
             aux = aux + a
         return (x, aux), new_cs
@@ -316,7 +319,8 @@ def _run_stack(params, cfg: ModelConfig, x, *, positions, cache, mask_kind,
             mask_kind=mask_kind, prefix_len=prefix_len,
             adapter_idx=adapter_idx, enc_out=enc_out,
             use_chunked=use_chunked, fill_cache=fill_cache,
-            block_tbl=block_tbl, use_paged_kernel=use_paged_kernel)
+            block_tbl=block_tbl, chunk_ids=chunk_ids,
+            use_paged_kernel=use_paged_kernel)
         new_tail.append(nc)
         aux_total = aux_total + a
 
@@ -340,12 +344,19 @@ def forward(params: Params, cfg: ModelConfig, tokens, *,
             adapter_idx=None, remat: bool = False,
             use_chunked: Optional[bool] = None,
             last_only: bool = False,
-            last_pos: Optional[jnp.ndarray] = None
+            last_pos: Optional[jnp.ndarray] = None,
+            start_pos: Optional[jnp.ndarray] = None,
+            block_tbl=None, chunk_ids=None,
+            use_paged_kernel: bool = False
             ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
     """Train (cache=None) or prefill (cache=zeros pytree → filled).
 
     tokens: (B, T) int32.  embeds: (B, P, D) VLM prefix patch embeddings
     (stub frontend).  frame_embeds: (B, S_enc, D) audio frames (stub).
+    Chunked paged prefill (cache = paged block pools): ``start_pos`` (B,)
+    offsets the positions to ``start_pos[b] + [0, T)``, ``chunk_ids``
+    (B, T//bs) names the pool blocks this chunk writes, and ``block_tbl``
+    (B, MB) maps the row's full logical history for attention.
     Returns (logits, filled_cache, aux_loss)."""
     B, T = tokens.shape
     x = _constrain(jnp.take(params["embed"], tokens, axis=0))
@@ -354,7 +365,11 @@ def forward(params: Params, cfg: ModelConfig, tokens, *,
         x = _constrain(jnp.concatenate([embeds.astype(x.dtype), x], axis=1))
         prefix_len = embeds.shape[1]
     Ttot = x.shape[1]
-    positions = jnp.arange(Ttot)
+    if start_pos is not None:
+        positions = (start_pos[:, None]
+                     + jnp.arange(Ttot)[None, :]).astype(jnp.int32)
+    else:
+        positions = jnp.arange(Ttot)
     enc_out = None
     if cfg.encoder_layers and frame_embeds is not None:
         enc_out = encode(params, cfg, frame_embeds)
@@ -364,7 +379,9 @@ def forward(params: Params, cfg: ModelConfig, tokens, *,
     x, new_cache, aux = _run_stack(
         params, cfg, x, positions=positions, cache=cache, mask_kind=mask_kind,
         prefix_len=prefix_len, adapter_idx=adapter_idx, enc_out=enc_out,
-        use_chunked=use_chunked, fill_cache=cache is not None, remat=remat)
+        use_chunked=use_chunked, fill_cache=cache is not None, remat=remat,
+        block_tbl=block_tbl, chunk_ids=chunk_ids,
+        use_paged_kernel=use_paged_kernel)
     if last_pos is not None:
         # bucketed serving prefill: rows are right-padded, so the logit that
         # samples the first output token lives at a per-row index, not -1

@@ -7,9 +7,12 @@ Layout:
                    blocks (cross-request prefix sharing).
   * ``slots``    — decode-slot table + SLO admission scheduler (reuses the
                    fill-or-expire math from ``serverless.batching``).
-  * ``runtime``  — fixed-shape jitted prefill/decode loop over the paged
-                   cache; requests join and leave mid-decode, no re-jit;
-                   prefix-shared admission + sliding-window reclamation.
+  * ``runtime``  — fixed-shape jitted chunked-paged-prefill/decode loop
+                   over the paged cache (prompts prefill straight into
+                   pool blocks, no bucket cache + scatter); requests join
+                   and leave mid-decode, no re-jit; prefix-shared
+                   admission skips covered-token compute; sliding-window
+                   reclamation.
   * ``replay``   — feeds ``serverless.traces`` arrival streams through the
                    runtime and emits simulator-compatible Request records.
 """

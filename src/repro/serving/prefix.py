@@ -90,6 +90,13 @@ class PrefixCache:
             covered.append(node.phys)
         return covered, node
 
+    def covered_tokens(self, adapter: int, tokens) -> int:
+        """Prompt tokens covered by the longest indexed chain — the prefix
+        chunked paged prefill can skip recomputing.  Pure lookup (no
+        refcount side effects): admission planning and TTFT estimation can
+        ask before committing to an admit."""
+        return len(self.match(adapter, tokens)[0]) * self.block_size
+
     # ------------------------------------------------------------ mutation
     def register(self, adapter: int, tokens, phys: Sequence[int],
                  covered: int, node: Optional[_Node]) -> List[int]:

@@ -25,7 +25,7 @@ from repro.serving.slots import AdmissionScheduler, SlotState
 @dataclasses.dataclass
 class ReplayEvent:
     t: float
-    kind: str        # admit | finish | abandon | abort | stall
+    kind: str        # admit | finish | abandon | abort | stall | reject
     req_id: int
     slot: int = -1
     detail: str = ""
@@ -55,25 +55,23 @@ def replay_trace(runtime: ContinuousRuntime, workload: Sequence[Dict],
     exercise cross-request prefix sharing — e.g. a common system prompt).
 
     Returns (SimResult, events).  Request records: ``dispatch`` = admission,
-    ``first_token`` = prefill completion (or -1 if abandoned), ``done`` =
-    last accepted token; per-token times interpolate inside decode chunks so
-    TPOT is well-defined.
+    ``first_token`` = prefill completion (or -1 if abandoned/rejected),
+    ``done`` = last accepted token; per-token times interpolate inside
+    decode chunks so TPOT is well-defined.  Requests whose prompt + output
+    exceed the per-slot KV capacity are rejected gracefully at admission
+    (``runtime.stats["rejected_too_long"]``, ``breakdown`` flag, ``reject``
+    event) — one oversized request never kills the whole replay.
     """
     scfg = runtime.scfg
-    group = prefill_group or scfg.prefill_group
+    group = prefill_group or 2   # admission group: fill-or-expire batching
+    #   granularity (prefill itself is per-request chunk loops)
     timings = runtime.warmup()
     sched = AdmissionScheduler(group=group, slo_abandon=slo_abandon)
-    # Eq. 2 profile from the measured bucketed prefill: grouping rows is
-    # nearly free (same dispatch), so alpha is a small fraction of T0
-    t0 = max(timings["prefill_s"].values())
+    # Eq. 2 profile from the measured chunked-prefill step: grouped items
+    # run their chunk loops back to back, so alpha is roughly one chunk
+    t0 = timings["prefill_chunk_s"]
     for fn_id in fn_adapter:
         sched.register(fn_id, t0, 0.15 * t0 / max(group, 1))
-
-    for w in workload:
-        if not runtime.fits(w["prompt_len"], max(w["output_len"], 1)):
-            raise ValueError(
-                f"req {w['req_id']}: prompt {w['prompt_len']} / output "
-                f"{w['output_len']} exceeds per-slot KV capacity")
 
     if prompts is None:
         prompts = synth_prompts(workload, runtime.cfg.vocab_size, seed)
@@ -135,6 +133,20 @@ def replay_trace(runtime: ContinuousRuntime, workload: Sequence[Dict],
             batch = sched.pop_ready(now, cap)
             if not batch:
                 break
+            fit = []
+            for r in batch:
+                if runtime.fits(r.prompt_len, max(r.output_len, 1)):
+                    fit.append(r)
+                else:
+                    # graceful rejection: counted + reported failed, the
+                    # rest of the batch (and the trace) keeps going
+                    runtime.reject_too_long(r)
+                    log("reject", r.req_id,
+                        detail=f"prompt {r.prompt_len} + output "
+                               f"{r.output_len} exceeds slot KV capacity")
+            batch = fit
+            if not batch:
+                continue
             res = runtime.try_admit(
                 [(r, prompts[r.req_id], fn_adapter[r.fn_id]) for r in batch])
             if res is None and len(batch) > 1:
@@ -149,7 +161,8 @@ def replay_trace(runtime: ContinuousRuntime, workload: Sequence[Dict],
                 if runtime.slots.num_active == 0 and runtime.pool.in_use == 0:
                     raise RuntimeError(
                         "KV pool too small for a single request — grow "
-                        "num_blocks or shrink prefill buckets")
+                        "num_blocks or shrink max_blocks_per_slot / "
+                        "prompt lengths")
                 break
             t_disp = now
             now += res.dt

@@ -8,12 +8,21 @@ mirrors, never the compiled program.  Decode runs in chunks of
 slots join/leave at chunk boundaries, which is the standard multi-step
 scheduling granularity trade-off.
 
-Join path (prompt prefill): prompts are right-padded to a fixed bucket
-length and prefilled as a group of ``prefill_group`` rows (fill-or-expire
-decides grouping upstream), then the prefilled contiguous K/V is scattered
-slot-wise into pool blocks (``core.engine.make_insert_fn``).  Right-padding
-junk inside the bucket lands either in blocks the decode loop overwrites
-before it can be attended, or in the reserved garbage block.
+Join path (chunked paged prefill): each prompt is processed in fixed
+``prefill_chunk``-sized slices by ONE compiled step that writes K/V
+straight into the slot's pool blocks through the block table — no
+contiguous bucket cache, no second scatter pass, no padded-bucket FLOPs,
+and prompt length is capped only by the block table (max_blocks_per_slot
+* block_size), not by a bucket set.  The step's fixed row width
+(``prefill_rows``) lets a group admission advance several prompts' chunk
+loops in one dispatch (partial groups pad with garbage rows); items that
+share blocks a groupmate registers in the same admit run in their own
+dispatch afterwards (their reads depend on the groupmate's writes).  The
+chunk loop starts at the first prefix-cache-*uncovered* token, so blocks
+shared with earlier requests skip COMPUTE, not just insert.  Chunk-tail
+padding junk lands either in blocks the decode loop overwrites before it
+can be attended, or in the reserved garbage block.  Exactly one prefill
+shape compiles — cold-start warmup no longer pays one compile per bucket.
 
 Leave path: EOS / token budget exhausted -> block refcounts drop; the last
 holder actually frees (prefix-shared blocks survive their first owner).
@@ -28,13 +37,13 @@ Cross-request prefix sharing (``ServingConfig.prefix_sharing``): admission
 matches the longest chain of *full* prompt blocks already in the pool for
 the same adapter (``serving.prefix.PrefixCache``) and maps those physical
 blocks into the new slot's table with refcount bumps instead of allocating
-and re-inserting them.  Only full prompt blocks are ever shared, so the
+them.  The chunk loop then starts past the covered tokens: shared blocks
+are neither re-inserted NOR recomputed (the bucketed path could only skip
+the insert).  Only full prompt blocks are ever shared, so the
 partially-filled tail block — the only block decode could still write
 inside the prompt range — is always a private copy (copy-on-write by
 construction; decode writes land at pos >= prompt_len, past every shared
-block).  The prefill still runs its fixed bucket shape (paged prefill is
-the open item), but the covered blocks' insert is skipped: their table
-entries in the scatter are redirected to the garbage block.
+block).
 
 Sliding-window reclamation (``ServingConfig.window_reclamation``): after
 each decode chunk, blocks whose entire [j*bs, (j+1)*bs) token range slid
@@ -57,9 +66,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import (make_insert_fn, make_prefill_step,
-                               make_serve_step)
-from repro.models import transformer as tf
+from repro.core.engine import make_chunked_prefill_step, make_serve_step
 from repro.models.cache import (GARBAGE_BLOCK, init_paged_cache,
                                 paging_unsupported_reason)
 from repro.models.config import ModelConfig
@@ -75,29 +82,38 @@ class ServingConfig:
     block_size: int = 16
     num_blocks: int = 64             # physical blocks incl. the garbage block
     max_blocks_per_slot: int = 8
-    prefill_buckets: Tuple[int, ...] = (32, 64)
-    prefill_group: int = 2           # rows per bucketed prefill dispatch
+    prefill_chunk: int = 32          # tokens per chunked-prefill dispatch
+    #   (must be a multiple of block_size; ONE compiled prefill shape
+    #   serves every prompt length)
+    prefill_rows: int = 4            # fixed row width of that one shape:
+    #   group admissions advance their chunk loops side by side in one
+    #   dispatch; partial groups pad with garbage rows (NOT a bucket — the
+    #   chunk dimension never changes and still compiles exactly once)
     decode_chunk: int = 4            # tokens per jitted decode dispatch
     eos_id: Optional[int] = None
-    use_kernel: bool = True          # in-kernel block-table walk for decode
+    use_kernel: bool = True          # in-kernel block-table walk for paged
     #   attention (Pallas on TPU, fused jnp block walk elsewhere); False =
     #   the gather-based reference path
     prefix_sharing: bool = True      # map full prompt blocks shared with
     #   earlier same-adapter requests into the slot table (refcounted)
-    #   instead of allocating + re-inserting them
+    #   instead of allocating them; the chunk loop skips their compute
     window_reclamation: bool = True  # sliding-window configs: release
     #   blocks that slid fully out of the window after each decode chunk
 
 
 @dataclasses.dataclass
 class AdmitResult:
-    slot_ids: List[int]              # bound slot per item; -1 = finished at
-    #   prefill (output_len == 1 / instant EOS), never bound to a slot
+    slot_ids: List[int]              # bound slot per admitted item; -1 =
+    #   finished at prefill (output_len == 1 / instant EOS), never bound
     first_tokens: List[int]
     finished: List[SlotState]        # output_len == 1 completes at prefill
-    dt: float
+    dt: float                        # total prefill device time this admit
     shared_blocks: List[int] = dataclasses.field(default_factory=list)
     #   per item: prompt blocks mapped from the prefix cache (not allocated)
+    rejected: List[Request] = dataclasses.field(default_factory=list)
+    #   items whose prompt/output exceed slot KV capacity — dropped and
+    #   counted, never admitted; the per-item lists above align with the
+    #   SURVIVING items (in input order)
 
 
 @dataclasses.dataclass
@@ -114,10 +130,13 @@ class ContinuousRuntime:
         reason = paging_unsupported_reason(cfg)
         if reason is not None:
             raise ValueError(reason)
-        for b in scfg.prefill_buckets:
-            if b % scfg.block_size:
-                raise ValueError(
-                    f"bucket {b} not a multiple of block_size")
+        if scfg.prefill_chunk < scfg.block_size \
+                or scfg.prefill_chunk % scfg.block_size:
+            raise ValueError(
+                f"prefill_chunk {scfg.prefill_chunk} must be a positive "
+                f"multiple of block_size {scfg.block_size}")
+        if scfg.prefill_rows < 1:
+            raise ValueError("prefill_rows must be >= 1")
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
@@ -133,15 +152,21 @@ class ContinuousRuntime:
             self.pool.evict_hook = self.prefix.forget_block
         self.stats: Dict[str, int] = {
             "prompt_tokens": 0,      # tokens in admitted prompts
-            "prefill_tokens": 0,     # prompt tokens newly inserted into the
+            "prefill_tokens": 0,     # prompt tokens newly written into the
             #   pool (prompt_tokens minus prefix-shared coverage)
+            "recomputed_tokens": 0,  # prompt tokens actually run through
+            #   prefill compute (the bucketed path recomputed ALL of
+            #   prompt_tokens; chunked prefill skips covered tokens)
             "shared_tokens": 0,      # prompt tokens covered by shared blocks
             "shared_block_maps": 0,  # table entries mapped via sharing
+            "prefill_chunks": 0,     # chunked-prefill dispatches
+            "rejected_too_long": 0,  # requests dropped: prompt + output
+            #   exceed slot KV capacity (graceful, never a raise mid-trace)
             "reclaimed_blocks": 0,   # blocks returned mid-flight (window)
         }
 
         serve = make_serve_step(cfg)
-        prefill = make_prefill_step(cfg)
+        chunk_step = make_chunked_prefill_step(cfg)
 
         def decode_chunk(params, tok, cache, pos, tbl, ai):
             def body(carry, _):
@@ -156,23 +181,20 @@ class ContinuousRuntime:
                 body, (tok, cache, pos), None, length=scfg.decode_chunk)
             return toks.T, cache                       # (B, K)
 
-        insert = make_insert_fn(cfg, scfg.block_size)
-
-        def prefill_insert(params, tokens, last_pos, ai, pool_cache, ids):
-            """Fused join: bucketed group prefill + slot-wise block scatter
-            in ONE dispatch (admission happens between decode chunks, so its
-            dispatch overhead is pure decode stall).  clamp_window=False:
-            sliding-window configs must keep every bucket position so whole
-            blocks can be scattered; the decode path masks the window."""
-            cache = tf.init_cache(cfg, tokens.shape[0], tokens.shape[1],
-                                  clamp_window=False)
-            logits, cache = prefill(params, tokens, cache,
-                                    adapter_idx=ai, last_pos=last_pos)
-            first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            return first, insert(pool_cache, cache, ids)
+        def prefill_chunk(params, tokens, start, last_idx, ai, pool_cache,
+                          chunk_ids, tbl):
+            """ONE slice of the join path: write this chunk's K/V straight
+            into pool blocks and sample the logit at ``last_idx`` (the
+            final chunk's logit is the request's first output token).
+            Admission happens between decode chunks, so its dispatch
+            overhead is pure decode stall — and there is exactly one such
+            compiled shape for every prompt length."""
+            return chunk_step(params, tokens, start, last_idx, pool_cache,
+                              chunk_ids, tbl, adapter_idx=ai,
+                              use_paged_kernel=scfg.use_kernel)
 
         self._decode = jax.jit(decode_chunk, donate_argnums=(2,))
-        self._prefill = jax.jit(prefill_insert, donate_argnums=(4,))
+        self._prefill = jax.jit(prefill_chunk, donate_argnums=(5,))
 
     # ------------------------------------------------------------ capacity
     def max_output_for(self, prompt_len: int) -> int:
@@ -181,15 +203,12 @@ class ContinuousRuntime:
         return cap - prompt_len + 1        # last KV write is L + out - 2
 
     def fits(self, prompt_len: int, output_len: int) -> bool:
-        if prompt_len < 1 or prompt_len > max(self.scfg.prefill_buckets):
+        """Capacity is the block table, not a bucket set: the last KV
+        write (position prompt_len + output_len - 2, or prompt_len - 1
+        for single-token requests) must land inside max_blocks_per_slot."""
+        if prompt_len < 1 or output_len < 1:
             return False
         return output_len <= self.max_output_for(prompt_len)
-
-    def bucket_for(self, prompt_len: int) -> int:
-        for b in sorted(self.scfg.prefill_buckets):
-            if prompt_len <= b:
-                return b
-        raise ValueError(f"prompt_len {prompt_len} exceeds largest bucket")
 
     def admit_cost_blocks(self, prompt_len: int, output_len: int = 2) -> int:
         # blocks covering positions 0..prompt_len: the prompt plus the first
@@ -198,14 +217,26 @@ class ContinuousRuntime:
         extra = 1 if output_len > 1 else 0
         return blocks_for_tokens(prompt_len + extra, self.scfg.block_size)
 
+    def reject_too_long(self, req: Request) -> None:
+        """Count a capacity rejection exactly once per request (idempotent:
+        retried batches must not inflate the counter) and flag the request
+        so the replay reports it failed instead of crashing the trace."""
+        if "rejected_too_long" not in req.breakdown:
+            self.stats["rejected_too_long"] += 1
+        req.breakdown["rejected_too_long"] = 1.0
+
     # ----------------------------------------------------------- admission
     def _plan_blocks(self, items: Sequence[Tuple[Request, np.ndarray, int]]
-                     ) -> Optional[List[Tuple[List[int], List[int]]]]:
+                     ) -> Optional[Tuple[List[Tuple[List[int], List[int]]],
+                                         List[List[int]]]]:
         """Per item, (shared prefix blocks, freshly allocated blocks) —
-        logical order is shared + fresh.  Sequential with rollback so items
-        inside one group can share each other's just-registered blocks;
-        returns None (pool state restored, bar evicted cached entries) if
-        any item's fresh allocation cannot be covered."""
+        logical order is shared + fresh — plus the per-item list of blocks
+        newly registered in the prefix index (an item whose *shared* list
+        intersects an earlier item's *registered* list depends on that
+        item's prefill writes).  Sequential with rollback so items inside
+        one group can share each other's just-registered blocks; returns
+        None (pool state restored, bar evicted cached entries) if any
+        item's fresh allocation cannot be covered."""
         plans: List[Tuple[List[int], List[int]]] = []
         registered: List[List[int]] = []
         for req, prompt, adapter in items:
@@ -236,83 +267,173 @@ class ContinuousRuntime:
                                            len(shared), node)
             plans.append((shared, fresh))
             registered.append(reg)
-        return plans
+        return plans, registered
+
+    def _chunk_prefill(self, items: Sequence[Tuple[np.ndarray, int,
+                                                   List[int], int]]
+                       ) -> List[int]:
+        """Advance up to ``prefill_rows`` prompts' chunk loops side by side
+        against the pool cache, one fixed (prefill_rows, prefill_chunk)
+        dispatch per round; rows whose loop finished early (and unused rows
+        of a partial group) ride along as garbage rows.  Items must not
+        read blocks their groupmates write (``try_admit`` partitions those
+        out) — each row only reads its own earlier rounds, prior requests'
+        blocks, or same-round writes of its own row.
+
+        Each item is (prompt, adapter, blocks, covered_blk); the loop
+        starts at the first prefix-uncovered token (a fully covered prompt
+        still recomputes its last block: the first-token logit needs
+        position L-1's hidden state, which only compute yields).  Returns
+        the per-item first output tokens, sampled from each item's final
+        chunk logit."""
+        scfg = self.scfg
+        bs, C = scfg.block_size, scfg.prefill_chunk
+        G, MB = scfg.prefill_rows, scfg.max_blocks_per_slot
+        assert 0 < len(items) <= G
+        starts: List[List[int]] = []
+        for prompt, _, _, cov in items:
+            L = len(prompt)
+            start_tok = min(cov * bs, ((L - 1) // bs) * bs)
+            starts.append(list(range(start_tok, L, C)))
+            self.stats["recomputed_tokens"] += L - start_tok
+        nb_c = C // bs
+        firsts = [0] * len(items)
+        final_rounds = {len(s) - 1 for s in starts}
+        logits: Dict[int, Any] = {}      # final rounds only: holding every
+        #   round's (G, V) device logits would pin O(chunks) buffers
+        for r in range(max(len(s) for s in starts)):
+            tok = np.zeros((G, C), np.int32)
+            start = np.zeros((G,), np.int32)
+            last_idx = np.zeros((G,), np.int32)
+            ai = np.zeros((G,), np.int32)
+            ids = np.full((G, nb_c), GARBAGE_BLOCK, np.int32)
+            tbl = np.full((G, MB), -1, np.int32)
+            for i, (prompt, adapter, blocks, cov) in enumerate(items):
+                if r >= len(starts[i]):
+                    continue             # finished: garbage row
+                c0 = starts[i][r]
+                L = len(prompt)
+                n_real = min(C, L - c0)
+                tok[i, :n_real] = prompt[c0:c0 + n_real]
+                start[i] = c0
+                last_idx[i] = min(max(L - 1 - c0, 0), C - 1)
+                ai[i] = adapter
+                tbl[i, : len(blocks)] = blocks
+                for jj in range(nb_c):
+                    j = c0 // bs + jj
+                    # skip shared blocks (they already hold exactly these
+                    # K/V and may be mapped by other slots) and
+                    # out-of-range blocks (chunk-tail junk past the last
+                    # allocated position)
+                    if cov <= j < len(blocks):
+                        ids[i, jj] = blocks[j]
+            lg, self.cache = self._prefill(
+                self.params, jnp.asarray(tok), jnp.asarray(start),
+                jnp.asarray(last_idx), jnp.asarray(ai), self.cache,
+                jnp.asarray(ids), jnp.asarray(tbl))
+            if r in final_rounds:
+                logits[r] = lg
+            self.stats["prefill_chunks"] += 1
+        synced: Dict[int, np.ndarray] = {}
+        for i in range(len(items)):
+            r = len(starts[i]) - 1
+            if r not in synced:
+                synced[r] = np.asarray(logits[r])           # device sync
+            firsts[i] = int(synced[r][i].argmax())
+        return firsts
 
     def try_admit(self, items: Sequence[Tuple[Request, np.ndarray, int]]
                   ) -> Optional[AdmitResult]:
         """Join ``(request, prompt_tokens, adapter)`` tuples into free slots.
 
-        All-or-nothing: returns None (no state change beyond prefix-cache
-        eviction) if slots or blocks are short.  len(items) must be <=
-        prefill_group.
+        Oversized items (``fits`` fails) are never fatal: they are dropped
+        from the group, counted in ``stats["rejected_too_long"]``, flagged
+        in ``request.breakdown``, and reported via ``AdmitResult.rejected``
+        — so one oversized request cannot kill a whole trace replay.  The
+        per-item result lists align with the surviving items.
+
+        All-or-nothing for the surviving items: returns None (no state
+        change beyond the rejection count and prefix-cache eviction) if
+        slots or blocks are short — callers retrying after None should
+        pre-filter with ``fits`` (the replay does) so rejected items are
+        not popped again.
 
         Prefix sharing: each item's longest chain of full prompt blocks
         already indexed for its adapter is mapped into the slot table with
-        refcount bumps; the prefill scatter skips those blocks (their
-        ``ids_mat`` entries stay at the garbage block), so a shared block
-        is written exactly once in its lifetime — by the request that first
-        registered it — and decode writes (pos >= prompt_len) can never
-        reach it.  The partially-filled tail block is never shared: the new
-        request gets a private copy filled by its own prefill insert."""
+        refcount bumps, and the chunk loop starts past the covered tokens —
+        a shared block is written exactly once in its lifetime (by the
+        request that first registered it) and its positions are never
+        recomputed.  The partially-filled tail block is never shared: the
+        new request gets a private copy filled by its own chunk loop."""
+        assert len(items) > 0
+        rejected: List[Request] = []
+        kept: List[Tuple[Request, np.ndarray, int]] = []
+        for req, prompt, adapter in items:
+            if self.fits(len(prompt), max(req.output_len, 1)):
+                kept.append((req, prompt, adapter))
+            else:
+                self.reject_too_long(req)
+                rejected.append(req)
+        if not kept:
+            return AdmitResult([], [], [], 0.0, rejected=rejected)
         scfg = self.scfg
-        assert 0 < len(items) <= scfg.prefill_group
         free = self.slots.free_slots()
-        if len(items) > len(free):
+        if len(kept) > len(free):
             return None
-        for r, p, _ in items:
-            if not self.fits(len(p), max(r.output_len, 1)):
-                raise ValueError(
-                    f"req {r.req_id}: prompt {len(p)} / output "
-                    f"{r.output_len} exceeds slot KV capacity")
-        plans = self._plan_blocks(items)
-        if plans is None:
+        planned = self._plan_blocks(kept)
+        if planned is None:
             return None
+        plans, registered = planned
 
-        bucket = self.bucket_for(max(len(p) for _, p, _ in items))
-        nb_insert = bucket // scfg.block_size
-        G = scfg.prefill_group
-        tokens = np.zeros((G, bucket), np.int32)
-        last_pos = np.zeros((G,), np.int32)
-        adapters = np.zeros((G,), np.int32)
-        ids_mat = np.full((G, nb_insert), GARBAGE_BLOCK, np.int32)
-        for i, (req, prompt, adapter) in enumerate(items):
-            L = len(prompt)
+        # Grouped rows of one dispatch read the pool the SAME round they
+        # write it, so an item that shares a block a groupmate registered
+        # in this very call (its prefill must write it first) cannot ride
+        # in the same rounds — it runs in its own dispatch afterwards.
+        # Blocks registered by *earlier* requests are already written.
+        group_reg: set = set()
+        independent: List[int] = []
+        dependent: List[int] = []
+        for i in range(len(kept)):
+            if group_reg & set(plans[i][0]):
+                dependent.append(i)
+            else:
+                independent.append(i)
+            group_reg.update(registered[i])
+
+        bs = scfg.block_size
+        t0 = time.perf_counter()
+        firsts: Dict[int, int] = {}
+        for batch_idx in ([independent[j:j + scfg.prefill_rows]
+                           for j in range(0, len(independent),
+                                          scfg.prefill_rows)]
+                          + [[i] for i in dependent]):
+            if not batch_idx:
+                continue
+            got = self._chunk_prefill(
+                [(kept[i][1], kept[i][2], plans[i][0] + plans[i][1],
+                  len(plans[i][0])) for i in batch_idx])
+            firsts.update(zip(batch_idx, got))
+        total_dt = time.perf_counter() - t0
+
+        slot_ids, first_tokens, finished = [], [], []
+        for i, (req, prompt, adapter) in enumerate(kept):
             shared, fresh = plans[i]
-            tokens[i, :L] = prompt
-            last_pos[i] = L - 1
-            adapters[i] = adapter
-            # scatter only the uncovered tail: logical entries [0, shared)
-            # keep the garbage id (skip — the shared block already holds
-            # exactly these K/V values, and skipping also keeps each
-            # physical block single-writer within the group dispatch)
-            blocks = shared + fresh
-            for j in range(len(shared), min(len(blocks), nb_insert)):
-                ids_mat[i, j] = blocks[j]
+            L = len(prompt)
+            first = firsts[i]
             self.stats["prompt_tokens"] += L
-            cov = len(shared) * scfg.block_size
+            cov = len(shared) * bs
             self.stats["shared_tokens"] += cov
             self.stats["prefill_tokens"] += L - cov
             self.stats["shared_block_maps"] += len(shared)
 
-        t0 = time.perf_counter()
-        first, self.cache = self._prefill(
-            self.params, jnp.asarray(tokens), jnp.asarray(last_pos),
-            jnp.asarray(adapters), self.cache, jnp.asarray(ids_mat))
-        first = np.asarray(first)             # blocks until device is done
-        dt = time.perf_counter() - t0
-
-        slot_ids, first_tokens, finished = [], [], []
-        for i, (req, prompt, adapter) in enumerate(items):
             sid = free[i]
-            shared, fresh = plans[i]
-            st = SlotState(sid=sid, req=req, adapter=adapter,
-                           prompt_len=len(prompt),
-                           budget=max(req.output_len, 1), pos=len(prompt),
-                           blocks=shared + fresh, last_token=int(first[i]),
+            st = SlotState(sid=sid, req=req, adapter=adapter, prompt_len=L,
+                           budget=max(req.output_len, 1), pos=L,
+                           blocks=shared + fresh, last_token=first,
                            shared=len(shared))
-            first_tokens.append(int(first[i]))
+            first_tokens.append(first)
             done = st.budget == 1 or (scfg.eos_id is not None
-                                      and int(first[i]) == scfg.eos_id)
+                                      and first == scfg.eos_id)
             if done:
                 # finished at prefill: never bound, so free[i] would be a
                 # lie — report -1 (the slot stays free for other requests).
@@ -324,9 +445,10 @@ class ContinuousRuntime:
                 finished.append(st)
             else:
                 slot_ids.append(sid)
-                self.slots.bind(st, int(first[i]))
-        return AdmitResult(slot_ids, first_tokens, finished, dt,
-                           shared_blocks=[len(p[0]) for p in plans])
+                self.slots.bind(st, first)
+        return AdmitResult(slot_ids, first_tokens, finished, total_dt,
+                           shared_blocks=[len(p[0]) for p in plans],
+                           rejected=rejected)
 
     # -------------------------------------------------------------- decode
     def _ensure_blocks(self) -> Tuple[List[int], List[SlotState]]:
@@ -427,22 +549,22 @@ class ContinuousRuntime:
 
     # -------------------------------------------------------------- meta
     def warmup(self) -> Dict[str, Any]:
-        """Compile every fixed shape (decode chunk, each prefill bucket +
-        insert) and measure steady-state latencies.  Leaves pool and slots
-        untouched (warmup traffic only ever writes the garbage block)."""
-        scfg, timings = self.scfg, {"prefill_s": {}}
-        G = scfg.prefill_group
-        for bucket in scfg.prefill_buckets:
-            ids = jnp.full((G, bucket // scfg.block_size), GARBAGE_BLOCK,
-                           jnp.int32)
-            for rep in range(2):
-                t0 = time.perf_counter()
-                first, self.cache = self._prefill(
-                    self.params, jnp.zeros((G, bucket), jnp.int32),
-                    jnp.zeros((G,), jnp.int32), jnp.zeros((G,), jnp.int32),
-                    self.cache, ids)
-                np.asarray(first)
-                timings["prefill_s"][bucket] = time.perf_counter() - t0
+        """Compile the two fixed shapes — ONE chunked-prefill step (for
+        every prompt length) and the decode chunk — and measure
+        steady-state latencies.  Leaves pool and slots untouched (warmup
+        traffic only ever writes the garbage block)."""
+        scfg, timings = self.scfg, {}
+        C, G = scfg.prefill_chunk, scfg.prefill_rows
+        ids = jnp.full((G, C // scfg.block_size), GARBAGE_BLOCK, jnp.int32)
+        tbl = jnp.full((G, scfg.max_blocks_per_slot), -1, jnp.int32)
+        zeros = jnp.zeros((G,), jnp.int32)
+        for rep in range(2):
+            t0 = time.perf_counter()
+            lg, self.cache = self._prefill(
+                self.params, jnp.zeros((G, C), jnp.int32), zeros, zeros,
+                zeros, self.cache, ids, tbl)
+            np.asarray(lg)
+            timings["prefill_chunk_s"] = time.perf_counter() - t0
         for rep in range(2):
             t0 = time.perf_counter()
             toks, self.cache = self._decode(
@@ -459,5 +581,14 @@ class ContinuousRuntime:
         re-jit mid-serving would blow every TPOT SLO)."""
         try:
             return int(self._decode._cache_size())
+        except AttributeError:              # older/newer jax without probe
+            return -1
+
+    def prefill_compiles(self) -> int:
+        """Compile-count probe for the chunked prefill step (must be 1
+        after warmup across EVERY prompt length — the bucketed path paid
+        one compile per bucket, all of them at cold-start warmup)."""
+        try:
+            return int(self._prefill._cache_size())
         except AttributeError:              # older/newer jax without probe
             return -1

@@ -1,0 +1,286 @@
+"""Chunked paged prefill: Pallas kernel vs oracle (interpret=True on CPU),
+fused jnp fallback, and the join-path equivalences the refactor must hold —
+chunked-paged prefill bitwise-equal to the legacy bucketed prefill+scatter
+(logits AND cache, via make_extract_fn) across chunk/prefix boundaries:
+prompts not divisible by the chunk, prompts longer than the old largest
+bucket, and a shared prefix whose cover ends mid-chunk."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.engine import (make_chunked_prefill_step, make_extract_fn,
+                               make_insert_fn, make_prefill_step,
+                               make_serve_step)
+from repro.kernels import get_kernel
+from repro.kernels.paged_prefill.ops import (_paged_prefill_jnp,
+                                             paged_prefill_gqa)
+from repro.kernels.paged_prefill.ref import paged_prefill_ref
+from repro.models import transformer as tf
+from repro.models.cache import GARBAGE_BLOCK, init_paged_cache
+from repro.serverless.batching import Request
+from repro.serving import ContinuousRuntime, ServingConfig
+
+
+# ------------------------------------------------------------- kernel ops
+def _mk(B, C, K, G, hd, bs, MB, NB, seed=0, dtype=jnp.float32):
+    """Random pools + per-row tables/starts: each row has enough allocated
+    blocks to cover its chunk, with a random amount of paged history."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, C, K * G, hd), jnp.float32).astype(dtype)
+    kp = jax.random.normal(ks[1], (K, NB, bs, hd), jnp.float32).astype(dtype)
+    vp = jax.random.normal(ks[2], (K, NB, bs, hd), jnp.float32).astype(dtype)
+    rng = np.random.default_rng(seed)
+    tbl = np.full((B, MB), -1, np.int32)
+    start = np.zeros((B,), np.int32)
+    min_nb = -(-C // bs) + 1
+    for b in range(B):
+        nb = int(rng.integers(min_nb, MB + 1))
+        tbl[b, :nb] = rng.choice(np.arange(1, NB), size=nb, replace=False)
+        start[b] = int(rng.integers(0, nb * bs - C + 1))
+    q_pos = jnp.asarray(start)[:, None] + jnp.arange(C)[None, :]
+    return q, kp, vp, jnp.asarray(tbl), q_pos
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,C,K,G,hd,bs,MB,NB,win", [
+    (3, 8, 2, 2, 32, 4, 8, 32, None),
+    (2, 8, 2, 3, 32, 8, 6, 24, 5),      # sliding window
+    (2, 16, 4, 1, 16, 8, 6, 24, None),  # MHA (G=1)
+    (2, 12, 1, 2, 16, 24, 3, 12, None),  # bs=24 exercises sub-block split
+])
+def test_kernel_matches_oracle_interpret(B, C, K, G, hd, bs, MB, NB, win,
+                                         dtype):
+    q, kp, vp, tbl, q_pos = _mk(B, C, K, G, hd, bs, MB, NB, seed=B + bs,
+                                dtype=dtype)
+    ref = paged_prefill_ref(q, kp, vp, tbl, q_pos, window=win)
+    out = paged_prefill_gqa(q, kp, vp, tbl, q_pos, window=win, q_block=4,
+                            s_block=16, interpret=True)
+    tol = 3e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_fused_jnp_matches_oracle():
+    """The off-TPU fast path (what the serving runtime runs on CPU)."""
+    for win in (None, 6):
+        q, kp, vp, tbl, q_pos = _mk(3, 8, 2, 2, 32, 4, 8, 32, seed=11)
+        ref = paged_prefill_ref(q, kp, vp, tbl, q_pos, window=win)
+        out = _paged_prefill_jnp(q, kp, vp, tbl, q_pos, window=win)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=3e-5, rtol=3e-5)
+
+
+def test_q_tile_split_invariance():
+    """Splitting the chunk into q tiles must not change results (the tile
+    skip guard prunes future/stale kv steps, never valid ones)."""
+    q, kp, vp, tbl, q_pos = _mk(2, 12, 2, 2, 16, 4, 8, 32, seed=5)
+    whole = paged_prefill_gqa(q, kp, vp, tbl, q_pos, q_block=12,
+                              interpret=True)
+    split = paged_prefill_gqa(q, kp, vp, tbl, q_pos, q_block=4, s_block=2,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(whole), np.asarray(split),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_ops_dispatch_and_registry():
+    q, kp, vp, tbl, q_pos = _mk(2, 8, 2, 2, 16, 4, 6, 24, seed=9)
+    ref = paged_prefill_ref(q, kp, vp, tbl, q_pos)
+    # use_kernel=False IS the reference
+    np.testing.assert_array_equal(
+        np.asarray(paged_prefill_gqa(q, kp, vp, tbl, q_pos,
+                                     use_kernel=False)),
+        np.asarray(ref))
+    # auto dispatch (fused jnp on CPU / Pallas on TPU) agrees with it
+    out = paged_prefill_gqa(q, kp, vp, tbl, q_pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-5, rtol=3e-5)
+    # registry resolves to the same entry point
+    fn = get_kernel("paged_prefill")
+    np.testing.assert_array_equal(
+        np.asarray(fn(q, kp, vp, tbl, q_pos, use_kernel=False)),
+        np.asarray(ref))
+
+
+# -------------------------------------------- chunked == legacy bucketed
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_smoke("llama2_7b").with_(dtype="float32")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg, lora_adapters=3)
+    return cfg, params
+
+
+def _chunked_prefill(cfg, params, prompt, *, bs, C, MB, NB, adapter=1,
+                     use_kernel=False):
+    """Drive make_chunked_prefill_step the way the runtime does: blocks
+    1..nb, chunk loop from 0, garbage ids past the allocated range.
+    Returns (last-position logits, pool cache, block ids)."""
+    chunk = jax.jit(
+        lambda p, t, s, li, c, ids, tbl, ai:
+        make_chunked_prefill_step(cfg)(p, t, s, li, c, ids, tbl,
+                                       adapter_idx=ai,
+                                       use_paged_kernel=use_kernel))
+    L = len(prompt)
+    pool = init_paged_cache(cfg, NB, bs)
+    blocks = list(range(1, (L + bs) // bs + 1))     # prompt + decode block
+    tbl = np.full((1, MB), -1, np.int32)
+    tbl[0, : len(blocks)] = blocks
+    ai = jnp.array([adapter], jnp.int32)
+    lg = None
+    for c0 in range(0, L, C):
+        tok = np.zeros((1, C), np.int32)
+        n = min(C, L - c0)
+        tok[0, :n] = prompt[c0:c0 + n]
+        ids = np.full((1, C // bs), GARBAGE_BLOCK, np.int32)
+        for jj in range(C // bs):
+            j = c0 // bs + jj
+            if j < len(blocks):
+                ids[0, jj] = blocks[j]
+        li = min(max(L - 1 - c0, 0), C - 1)
+        lg, pool = chunk(params, jnp.asarray(tok),
+                         jnp.asarray([c0], jnp.int32),
+                         jnp.asarray([li], jnp.int32), pool,
+                         jnp.asarray(ids), jnp.asarray(tbl), ai)
+    return lg, pool, blocks
+
+
+def _legacy_prefill(cfg, params, prompt, *, bs, bucket, NB, adapter=1):
+    """The retired join path: right-pad to a bucket, prefill a contiguous
+    throwaway cache, scatter whole blocks into the pool."""
+    prefill = make_prefill_step(cfg)
+    insert = jax.jit(make_insert_fn(cfg, bs))
+    L = len(prompt)
+    tok = np.zeros((1, bucket), np.int32)
+    tok[0, :L] = prompt
+    cache = tf.init_cache(cfg, 1, bucket, clamp_window=False)
+    lg, cache = prefill(params, jnp.asarray(tok), cache,
+                        adapter_idx=jnp.array([adapter], jnp.int32),
+                        last_pos=jnp.array([L - 1], jnp.int32))
+    pool = init_paged_cache(cfg, NB, bs)
+    ids = np.arange(1, bucket // bs + 1, dtype=np.int32)[None]
+    return lg, insert(pool, cache, jnp.asarray(ids)), list(ids[0])
+
+
+@pytest.mark.parametrize("L,C,bucket", [
+    (5, 8, 16),      # shorter than one chunk
+    (11, 8, 16),     # not divisible by the chunk
+    (16, 8, 16),     # exact block+chunk multiple
+    (40, 16, 64),    # longer than the old (16, 32) bucket set
+])
+def test_chunked_matches_legacy_bucketed_bitwise(small_model, L, C, bucket):
+    """Acceptance: chunked paged prefill must reproduce the legacy
+    bucketed prefill+scatter BIT-FOR-BIT — first-token logits and every
+    real prompt position of the cache (make_extract_fn), across prompts
+    not divisible by the chunk and longer than the old largest bucket."""
+    cfg, params = small_model
+    bs, MB, NB = 4, 16, 24
+    rng = np.random.default_rng(L)
+    prompt = rng.integers(0, cfg.vocab_size, L, dtype=np.int32)
+    lgA, poolA, idsA = _legacy_prefill(cfg, params, prompt, bs=bs,
+                                       bucket=bucket, NB=NB)
+    lgB, poolB, idsB = _chunked_prefill(cfg, params, prompt, bs=bs, C=C,
+                                        MB=MB, NB=NB)
+    np.testing.assert_array_equal(np.asarray(lgA), np.asarray(lgB))
+    extract = jax.jit(make_extract_fn(cfg, bs))
+    extA = extract(poolA, jnp.asarray(np.asarray(idsA, np.int32)))
+    extB = extract(poolB, jnp.asarray(np.asarray(idsB, np.int32)))
+    for pj in extA["periods"]:
+        for kk in ("k", "v"):
+            np.testing.assert_array_equal(
+                np.asarray(extA["periods"][pj][kk])[:, :L],
+                np.asarray(extB["periods"][pj][kk])[:, :L])
+
+
+def test_chunked_decode_continues_from_legacy_identically(small_model):
+    """Decode after a chunked-paged prefill must emit the same logits as
+    decode after the legacy bucketed join (the cache is interchangeable)."""
+    cfg, params = small_model
+    bs, MB, NB, L = 4, 16, 24, 11
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab_size, L, dtype=np.int32)
+    serve = make_serve_step(cfg)
+
+    def decode_steps(lg, pool, blocks, n=4):
+        tbl = np.full((1, MB), -1, np.int32)
+        tbl[0, : len(blocks)] = blocks
+        tbl = jnp.asarray(tbl)
+        tok = jnp.argmax(lg, -1).astype(jnp.int32)
+        pos = jnp.array([L], jnp.int32)
+        outs = []
+        for _ in range(n):
+            lg2, pool = serve(params, tok, pool, pos,
+                              adapter_idx=jnp.array([1], jnp.int32),
+                              block_tbl=tbl, use_paged_kernel=False)
+            outs.append(np.asarray(lg2))
+            tok = jnp.argmax(lg2, -1).astype(jnp.int32)
+            pos = pos + 1
+        return outs
+
+    lgA, poolA, idsA = _legacy_prefill(cfg, params, prompt, bs=bs,
+                                       bucket=16, NB=NB)
+    lgB, poolB, idsB = _chunked_prefill(cfg, params, prompt, bs=bs, C=8,
+                                        MB=MB, NB=NB)
+    for a, b in zip(decode_steps(lgA, poolA, idsA[:3 + 1]),
+                    decode_steps(lgB, poolB, idsB)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_shared_cover_ending_mid_chunk_bitwise(small_model):
+    """A shared prefix whose cover ends mid-chunk (covered tokens not a
+    multiple of prefill_chunk): the sharer's chunk loop starts at the
+    cover boundary and its decode must bitwise-match an unshared admit."""
+    cfg, params = small_model
+    rng = np.random.default_rng(13)
+    head = rng.integers(0, 512, 8, dtype=np.int32)     # 1 full block
+    tail_a = rng.integers(0, 512, 12, dtype=np.int32)
+    tail_b = rng.integers(0, 512, 12, dtype=np.int32)
+    prompt_a = np.concatenate([head, tail_a])
+    prompt_b = np.concatenate([head, tail_b])          # diverges at block 1
+
+    def admit_b(sharing):
+        scfg = ServingConfig(num_slots=4, block_size=8, num_blocks=32,
+                             max_blocks_per_slot=6, prefill_chunk=16,
+                             decode_chunk=4, prefix_sharing=sharing)
+        rt = ContinuousRuntime(cfg, params, scfg)
+        reqs = [Request(req_id=i, fn_id="fn0", arrival=0.0, prompt_len=20,
+                        output_len=9, slo_ttft=30.0) for i in range(2)]
+        rt.try_admit([(reqs[0], prompt_a, 0)])
+        rb = rt.try_admit([(reqs[1], prompt_b, 0)])
+        if sharing:
+            assert rb.shared_blocks == [1], "cover must be exactly 1 block"
+            # cover ends at token 8, mid-way into the 16-token chunk grid
+            assert rt.stats["recomputed_tokens"] < 2 * 20
+        out = {rb.slot_ids[0]: [rb.first_tokens[0]]}
+        for _ in range(8):
+            d = rt.decode()
+            if d is None:
+                break
+            for sid, toks in d.emitted.items():
+                out.setdefault(sid, []).extend(toks)
+        assert rt.pool.in_use == 0
+        return out[rb.slot_ids[0]]
+
+    assert admit_b(True) == admit_b(False)
+
+
+def test_runtime_prefill_compile_once_across_lengths(small_model):
+    """One compiled prefill shape serves every prompt length (the bucket
+    set compiled one variant per bucket)."""
+    cfg, params = small_model
+    scfg = ServingConfig(num_slots=4, block_size=8, num_blocks=64,
+                         max_blocks_per_slot=8, prefill_chunk=16,
+                         decode_chunk=4)
+    rt = ContinuousRuntime(cfg, params, scfg)
+    rng = np.random.default_rng(3)
+    for i, L in enumerate((5, 16, 23, 40, 57)):
+        req = Request(req_id=i, fn_id="fn0", arrival=0.0, prompt_len=L,
+                      output_len=2, slo_ttft=30.0)
+        res = rt.try_admit([(req, rng.integers(0, 512, L,
+                                               dtype=np.int32), 0)])
+        assert res is not None and res.slot_ids[0] >= 0
+        while rt.slots.num_active:
+            rt.decode()
+    assert rt.prefill_compiles() in (1, -1)
+    assert rt.pool.in_use == 0

@@ -120,6 +120,19 @@ def test_prefix_cache_match_register_forget():
     assert len(pc) == 0
 
 
+def test_prefix_cache_covered_tokens_probe():
+    """covered_tokens = block-cover in tokens, side-effect-free (no
+    refcounts touched, index unchanged) — the chunk loop's skip count."""
+    pc = PrefixCache(block_size=4)
+    toks = np.arange(10, dtype=np.int32)
+    assert pc.covered_tokens(0, toks) == 0
+    pc.register(0, toks, [5, 6, 7], 0, None)
+    assert pc.covered_tokens(0, toks) == 8      # 2 full blocks, tail never
+    assert pc.covered_tokens(0, toks[:6]) == 4  # partial second block
+    assert pc.covered_tokens(1, toks) == 0      # keyed by adapter
+    assert len(pc) == 2                         # probe registered nothing
+
+
 def test_prefix_cache_duplicate_registration_keeps_existing():
     pc = PrefixCache(block_size=4)
     toks = np.arange(8, dtype=np.int32)
@@ -147,8 +160,8 @@ def _req(rid, prompt_len, output_len):
 
 def _mk_rt(cfg, params, **kw):
     scfg = ServingConfig(num_slots=4, block_size=8, num_blocks=32,
-                         max_blocks_per_slot=6, prefill_buckets=(16, 32),
-                         prefill_group=2, decode_chunk=4, **kw)
+                         max_blocks_per_slot=6, prefill_chunk=16,
+                         decode_chunk=4, **kw)
     return ContinuousRuntime(cfg, params, scfg)
 
 
@@ -274,9 +287,8 @@ def test_window_reclamation_frees_blocks_logits_bitwise(small_model):
 
     def mk(reclaim):
         scfg = ServingConfig(num_slots=2, block_size=4, num_blocks=32,
-                             max_blocks_per_slot=8, prefill_buckets=(16,),
-                             prefill_group=2, decode_chunk=4,
-                             prefix_sharing=False,
+                             max_blocks_per_slot=8, prefill_chunk=16,
+                             decode_chunk=4, prefix_sharing=False,
                              window_reclamation=reclaim)
         rt = ContinuousRuntime(swa, params, scfg)
         rt.try_admit([(_req(0, 12, 21), prompt, 0)])
@@ -329,8 +341,8 @@ def test_window_reclamation_of_shared_blocks_decrements(small_model):
     prompt = rng.integers(0, 512, 8, dtype=np.int32)    # 2 full blocks
 
     scfg = ServingConfig(num_slots=2, block_size=4, num_blocks=32,
-                         max_blocks_per_slot=8, prefill_buckets=(16,),
-                         prefill_group=2, decode_chunk=4)
+                         max_blocks_per_slot=8, prefill_chunk=16,
+                         decode_chunk=4)
     rt = ContinuousRuntime(swa, params, scfg)
     r0 = rt.try_admit([(_req(0, 8, 20), prompt, 0)])
     rt.decode()
@@ -343,6 +355,32 @@ def test_window_reclamation_of_shared_blocks_decrements(small_model):
     assert r0.slot_ids[0] != r1.slot_ids[0]
 
 
+def test_intra_group_sharing_runs_dependent_item_after(small_model):
+    """Two identical prompts admitted in ONE try_admit call: the second
+    shares blocks the first registers in that very call, so its chunk
+    loop must run AFTER the first's writes (grouped rows would read the
+    pool before the groupmate wrote it).  Output must bitwise-match two
+    unshared sequential admits."""
+    cfg, params = small_model
+    rng = np.random.default_rng(29)
+    prompt = rng.integers(0, 512, 20, dtype=np.int32)
+
+    def run(sharing):
+        rt = _mk_rt(cfg, params, prefix_sharing=sharing)
+        reqs = [_req(i, 20, 9) for i in range(2)]
+        res = rt.try_admit([(reqs[0], prompt, 0), (reqs[1], prompt, 0)])
+        if sharing:
+            assert res.shared_blocks == [0, 2], "intra-group share missing"
+        out = {sid: [tok] for sid, tok in
+               zip(res.slot_ids, res.first_tokens)}
+        for sid, toks in _drain(rt).items():
+            out[sid].extend(toks)
+        assert rt.slots.num_active == 0 and rt.pool.in_use == 0
+        return out
+
+    assert run(True) == run(False)
+
+
 def test_prefix_cache_eviction_under_pool_pressure(small_model):
     """Cached prompt blocks are capacity: a pool too small to hold every
     retired prefix evicts LRU-first and the trie forgets the mapping —
@@ -352,8 +390,8 @@ def test_prefix_cache_eviction_under_pool_pressure(small_model):
     p_a = rng.integers(0, 512, 16, dtype=np.int32)
     p_b = rng.integers(0, 512, 16, dtype=np.int32)
     scfg = ServingConfig(num_slots=2, block_size=8, num_blocks=5,
-                         max_blocks_per_slot=3, prefill_buckets=(16,),
-                         prefill_group=2, decode_chunk=4)
+                         max_blocks_per_slot=3, prefill_chunk=16,
+                         decode_chunk=4)
     rt = ContinuousRuntime(cfg, params, scfg)     # 4 usable blocks: one
     #   request needs 3, so A's cached prefix cannot coexist with B live
     rt.try_admit([(_req(0, 16, 6), p_a, 0)])

@@ -203,8 +203,8 @@ def test_insert_extract_roundtrip(small_model):
 # ------------------------------------------------------------- end-to-end
 def _mk_runtime(cfg, params, **kw):
     scfg = ServingConfig(num_slots=4, block_size=8, num_blocks=32,
-                         max_blocks_per_slot=6, prefill_buckets=(16, 32),
-                         prefill_group=2, decode_chunk=4, **kw)
+                         max_blocks_per_slot=6, prefill_chunk=16,
+                         decode_chunk=4, **kw)
     return ContinuousRuntime(cfg, params, scfg)
 
 
@@ -266,8 +266,85 @@ def test_replay_trace_end_to_end(small_model):
     assert rt.slots.num_active == 0, "slots leaked"
     assert rt.pool.in_use == 0, "KV blocks leaked"
     assert rt.decode_compiles() in (1, -1), "decode step re-jitted"
+    assert rt.prefill_compiles() in (1, -1), "chunked prefill re-jitted"
     kinds = {e.kind for e in events}
     assert "admit" in kinds and "finish" in kinds
+
+
+def test_oversized_request_rejected_gracefully(small_model):
+    """An oversized request mid-trace must not kill the replay: it is
+    counted (stats + breakdown flag), reported failed, and every other
+    request is still served (the old path raised ValueError)."""
+    cfg, params = small_model
+    rt = _mk_runtime(cfg, params)
+    specs = [TraceSpec("fn0", "bursty", 2.0, 6.0, prompt_len=12,
+                       output_len=6, slo_ttft=30.0)]
+    wl = make_workload(specs, seed=3)
+    assert len(wl) >= 3
+    big = wl[1]["req_id"]
+    wl[1]["prompt_len"] = 80            # 80 + 6 - 1 > 6 * 8 slot capacity
+    res, events = replay_trace(rt, wl, {"fn0": 0}, slo_abandon=False,
+                               collect_events=True)
+    assert rt.stats["rejected_too_long"] == 1
+    rej = [r for r in res.requests if r.req_id == big][0]
+    assert rej.first_token < 0 and rej.breakdown["rejected_too_long"] == 1.0
+    served = [r for r in res.requests if r.first_token >= 0]
+    assert len(served) == len(wl) - 1, "healthy requests were dropped too"
+    assert any(e.kind == "reject" and e.req_id == big for e in events)
+    assert rt.slots.num_active == 0 and rt.pool.in_use == 0
+
+
+def test_try_admit_mixed_group_rejects_only_oversized(small_model):
+    """Direct try_admit with a fit + an oversized item: the oversized one
+    lands in AdmitResult.rejected (counted once, idempotently), the fit
+    one is admitted, and the per-item lists align with the survivors."""
+    cfg, params = small_model
+    rt = _mk_runtime(cfg, params)
+    rng = np.random.default_rng(2)
+    ok = Request(req_id=0, fn_id="fn0", arrival=0.0, prompt_len=12,
+                 output_len=6, slo_ttft=10.0)
+    big = Request(req_id=1, fn_id="fn0", arrival=0.0, prompt_len=80,
+                  output_len=6, slo_ttft=10.0)
+    res = rt.try_admit([
+        (ok, rng.integers(0, 512, 12, dtype=np.int32), 0),
+        (big, rng.integers(0, 512, 80, dtype=np.int32), 0)])
+    assert [r.req_id for r in res.rejected] == [1]
+    assert len(res.slot_ids) == 1 and res.slot_ids[0] >= 0
+    assert rt.stats["rejected_too_long"] == 1
+    rt.reject_too_long(big)              # idempotent: no double count
+    assert rt.stats["rejected_too_long"] == 1
+    # an all-oversized group admits nothing but still reports the drops
+    res2 = rt.try_admit([(big, rng.integers(0, 512, 80,
+                                            dtype=np.int32), 0)])
+    assert res2.slot_ids == [] and [r.req_id for r in res2.rejected] == [1]
+    for _ in range(6):
+        if rt.decode() is None:
+            break
+    assert rt.slots.num_active == 0 and rt.pool.in_use == 0
+
+
+def test_prompt_longer_than_chunk_and_any_bucket(small_model):
+    """Prompt length is capped by the block table, not a bucket set: a
+    40-token prompt (chunk 16 -> 3 chunk dispatches, longer than the old
+    largest bucket 32) is served with ONE prefill compile."""
+    cfg, params = small_model
+    rt = _mk_runtime(cfg, params)
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, 512, 40, dtype=np.int32)
+    req = Request(req_id=0, fn_id="fn0", arrival=0.0, prompt_len=40,
+                  output_len=6, slo_ttft=10.0)
+    res = rt.try_admit([(req, prompt, 0)])
+    assert res is not None and res.slot_ids[0] >= 0
+    assert rt.stats["prefill_chunks"] == 3
+    produced = 1
+    for _ in range(6):
+        d = rt.decode()
+        if d is None:
+            break
+        produced += sum(len(t) for t in d.emitted.values())
+    assert produced == 6
+    assert rt.prefill_compiles() in (1, -1)
+    assert rt.slots.num_active == 0 and rt.pool.in_use == 0
 
 
 def test_stall_does_not_corrupt_output(small_model):
@@ -281,8 +358,7 @@ def test_stall_does_not_corrupt_output(small_model):
     def run(num_blocks):
         scfg = ServingConfig(num_slots=2, block_size=4,
                              num_blocks=num_blocks, max_blocks_per_slot=4,
-                             prefill_buckets=(8,), prefill_group=2,
-                             decode_chunk=4)
+                             prefill_chunk=8, decode_chunk=4)
         rt = ContinuousRuntime(cfg, params, scfg)
         reqs = [Request(req_id=i, fn_id="fn0", arrival=0.0, prompt_len=8,
                         output_len=9, slo_ttft=10.0) for i in range(2)]
@@ -368,9 +444,8 @@ def test_sliding_window_served_end_to_end(small_model):
 
     def run(use_kernel):
         scfg = ServingConfig(num_slots=4, block_size=8, num_blocks=32,
-                             max_blocks_per_slot=6, prefill_buckets=(16,),
-                             prefill_group=2, decode_chunk=4,
-                             use_kernel=use_kernel)
+                             max_blocks_per_slot=6, prefill_chunk=16,
+                             decode_chunk=4, use_kernel=use_kernel)
         rt = ContinuousRuntime(swa, params, scfg)
         specs = [TraceSpec("fn0", "bursty", 2.0, 4.0, prompt_len=12,
                            output_len=8, slo_ttft=30.0)]
@@ -437,8 +512,8 @@ def test_pool_exhaustion_progress(small_model):
     livelocks, and still reclaims every block."""
     cfg, params = small_model
     scfg = ServingConfig(num_slots=4, block_size=8, num_blocks=8,
-                        max_blocks_per_slot=6, prefill_buckets=(16,),
-                        prefill_group=2, decode_chunk=4)
+                         max_blocks_per_slot=6, prefill_chunk=16,
+                         decode_chunk=4)
     rt = ContinuousRuntime(cfg, params, scfg)
     specs = [TraceSpec("fn0", "bursty", 4.0, 3.0, prompt_len=12,
                        output_len=16, slo_ttft=30.0)]
