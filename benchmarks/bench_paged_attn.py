@@ -164,12 +164,13 @@ def bench_serving(rate: float, duration: float, seed: int,
         pos = jnp.asarray(rt.slots.pos)
         tbl = jnp.asarray(rt.slots.block_tbl)
         ai = jnp.asarray(rt.slots.adapter)
+        srows = jnp.asarray(rt.slots.state_rows(rt.garbage_state_row))
         meds = []
         for _ in range(3):
             t0 = time.perf_counter()
             for _ in range(10):
                 toks_, rt.cache = rt._decode(rt.params, tok, rt.cache,
-                                             pos, tbl, ai)
+                                             pos, tbl, ai, srows)
             np.asarray(toks_)
             meds.append((time.perf_counter() - t0) / 10)
         t_dec = statistics.median(meds)

@@ -116,14 +116,16 @@ def bench_ttft(cfg, params, lengths: Sequence[int], buckets: Sequence[int],
     def run_chunked() -> float:
         t0 = time.perf_counter()
         for p in prompts:
-            rt._chunk_prefill([(p, 0, [], 0)])  # garbage ids: perf-only
+            # garbage ids + garbage state row: perf-only
+            rt._chunk_prefill([(p, 0, [], 0, rt.garbage_state_row)])
         return time.perf_counter() - t0
 
     # cold start: the first request cannot be served before its shape has
     # compiled — the legacy path must warm EVERY bucket (a mixed-length
     # service hits them all), chunked prefill warms one
     t0 = time.perf_counter()
-    rt._chunk_prefill([(np.zeros((chunk,), np.int32), 0, [], 0)])
+    rt._chunk_prefill([(np.zeros((chunk,), np.int32), 0, [], 0,
+                        rt.garbage_state_row)])
     warm_chunked = time.perf_counter() - t0
     t0 = time.perf_counter()
     for b in buckets:

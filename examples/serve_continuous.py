@@ -22,6 +22,12 @@ from repro.serving import ContinuousRuntime, ServingConfig, replay_trace
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama2_7b",
+                    choices=["llama2_7b", "mamba2_780m",
+                             "recurrentgemma_9b"],
+                    help="smoke config to serve: llama2 (attention-only "
+                         "paged KV), mamba2 (pure-SSD slot state) or "
+                         "recurrentgemma (hybrid REC+local-attention)")
     ap.add_argument("--adapters", type=int, default=3)
     ap.add_argument("--rate", type=float, default=2.0,
                     help="mean requests/s per adapter function")
@@ -39,14 +45,19 @@ def main():
     if args.shared_prefix >= args.prompt_len:
         raise SystemExit("--shared-prefix must be < --prompt-len")
 
-    cfg = get_smoke("llama2_7b").with_(name="serve-continuous",
-                                       dtype="float32")
+    cfg = get_smoke(args.arch).with_(name="serve-continuous",
+                                     dtype="float32")
     params = tf.init_params(jax.random.PRNGKey(0), cfg,
                             lora_adapters=args.adapters)
     scfg = ServingConfig(
         num_slots=args.slots, block_size=8, num_blocks=96,
         max_blocks_per_slot=8, prefill_chunk=16, decode_chunk=4)
     rt = ContinuousRuntime(cfg, params, scfg)
+    if args.arch != "llama2_7b":
+        from repro.models.cache import state_bytes_per_slot
+        print(f"{args.arch}: hybrid/attention-free stack — each slot pins "
+              f"{state_bytes_per_slot(cfg)} B of dense REC/SSD state "
+              f"beside its paged KV blocks")
 
     specs = [TraceSpec(f"fn{a}", "bursty", args.rate, args.duration,
                        prompt_len=args.prompt_len,
@@ -103,10 +114,17 @@ def main():
         print(f"prefix sharing: {st['shared_tokens']}/"
               f"{st['prompt_tokens']} prompt tokens ({pct:.0f}%) mapped "
               f"from resident blocks ({st['shared_block_maps']} block maps)")
+        if not rt.needs_kv:
+            tail = ("attention-free stack: no KV blocks exist, so there "
+                    "is nothing to share or skip")
+        elif rt.has_state:
+            tail = ("covered prefixes skip insert only (REC/SSD state "
+                    "must integrate every prefix token)")
+        else:
+            tail = "covered prefixes skip compute, not just insert"
         print(f"chunked prefill: {st['recomputed_tokens']} tokens "
               f"({rec:.0f}% of prompts) computed in "
-              f"{st['prefill_chunks']} chunk dispatches — covered prefixes "
-              f"skip compute, not just insert")
+              f"{st['prefill_chunks']} chunk dispatches — {tail}")
     print(f"decode compiles after warmup: {rt.decode_compiles()}, "
           f"prefill compiles: {rt.prefill_compiles()} "
           f"(fixed shapes -> exactly 1 each)")

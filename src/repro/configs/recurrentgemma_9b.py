@@ -17,4 +17,7 @@ CONFIG = ModelConfig(
 
 SMOKE = CONFIG.with_(
     num_layers=3, d_model=128, num_heads=4, num_kv_heads=1, head_dim=32,
-    d_ff=256, vocab_size=512, sliding_window=16)
+    d_ff=256, vocab_size=512, sliding_window=16,
+    # REC scans run in ssm_chunk-aligned blocks; tiny serving tests use
+    # prefill_chunk 8/16, which must be a multiple of this
+    ssm_chunk=8)

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import transformer as tf
-from repro.models.config import ModelConfig
+from repro.models.config import ATTN, ModelConfig
 
 Params = Dict[str, Any]
 
@@ -52,11 +52,12 @@ def make_chunked_prefill_step(cfg: ModelConfig):
 
     def chunked_prefill_step(params, tokens, start, last_idx, cache,
                              chunk_ids, block_tbl, *, adapter_idx=None,
-                             use_paged_kernel=False):
+                             use_paged_kernel=False, state_rows=None):
         logits, cache, _ = tf.forward(
             params, cfg, tokens, cache=cache, adapter_idx=adapter_idx,
             start_pos=start, last_pos=last_idx, block_tbl=block_tbl,
-            chunk_ids=chunk_ids, use_paged_kernel=use_paged_kernel)
+            chunk_ids=chunk_ids, use_paged_kernel=use_paged_kernel,
+            state_rows=state_rows)
         return logits[:, -1], cache
 
     return chunked_prefill_step
@@ -69,10 +70,11 @@ def make_serve_step(cfg: ModelConfig):
     slot's logical blocks to pool blocks (continuous-batching serving)."""
 
     def serve_step(params, token, cache, pos, *, adapter_idx=None,
-                   block_tbl=None, use_paged_kernel=False):
+                   block_tbl=None, use_paged_kernel=False, state_rows=None):
         return tf.decode_step(params, cfg, token, cache, pos,
                               adapter_idx=adapter_idx, block_tbl=block_tbl,
-                              use_paged_kernel=use_paged_kernel)
+                              use_paged_kernel=use_paged_kernel,
+                              state_rows=state_rows)
 
     return serve_step
 
@@ -150,6 +152,93 @@ def make_extract_fn(cfg: ModelConfig, block_size: int):
         }
 
     return extract
+
+
+# --------------------------------------------------- slot-wise state ops
+# REC/SSD layers have no pool blocks to insert/extract: their serving
+# state is dense per-slot rows (models.cache.slot_state_spec).  These
+# mirror make_insert_fn/make_extract_fn for that state — the runtime never
+# dispatches them (chunked prefill zeroes a recycled row in-step when it
+# sees position 0 and scatters updates itself); they exist for tests,
+# migration tooling, and slot snapshot/restore.
+def _map_state_layers(cfg: ModelConfig, pool_cache, fn, other=None):
+    """Apply fn(layer_cache, kind, stacked) across the cache pytree; with
+    ``other`` (a parallel per-layer tree, e.g. extracted states), fn
+    receives (layer_cache, other_layer) as its first argument instead —
+    the single traversal all three state ops share."""
+
+    def at(layer, key_j=None, key_i=None):
+        if other is None:
+            return layer
+        o = (other["periods"][key_j] if key_j is not None
+             else other["tail"][key_i])
+        return (layer, o)
+
+    return {
+        "periods": {
+            f"p{j}": fn(at(pool_cache["periods"][f"p{j}"], key_j=f"p{j}"),
+                        kind, True)
+            for j, kind in enumerate(cfg.pattern)},
+        "tail": tuple(
+            fn(at(pool_cache["tail"][i], key_i=i), kind, False)
+            for i, kind in enumerate(cfg.remainder_layers)),
+    }
+
+
+def make_state_extract_fn(cfg: ModelConfig):
+    """Slot-wise recurrent-state *extract*: (pool_cache, row ()) ->
+    per-layer REC/SSD state ({"conv","h"/"ssm"}, periods stacked (P, ...));
+    ATTN layers -> None (their K/V lives in pool blocks — make_extract_fn).
+    Pure fn, jit it with the caller."""
+
+    def extract(pool_cache, row):
+        def one(layer, kind, stacked):
+            if kind == ATTN:
+                return None
+            return jax.tree_util.tree_map(
+                lambda t: t[:, row] if stacked else t[row], layer)
+
+        return _map_state_layers(cfg, pool_cache, one)
+
+    return extract
+
+
+def make_state_insert_fn(cfg: ModelConfig):
+    """Slot-wise recurrent-state *insert* (inverse of extract):
+    (pool_cache, states, row ()) -> pool_cache with the REC/SSD rows of
+    ``row`` replaced.  ``states`` uses the extract layout; ATTN entries
+    are ignored."""
+
+    def insert(pool_cache, states, row):
+        def one(args, kind, stacked):
+            layer, st = args
+            if kind == ATTN:
+                return layer
+            return jax.tree_util.tree_map(
+                lambda t, s: (t.at[:, row].set(s.astype(t.dtype)) if stacked
+                              else t.at[row].set(s.astype(t.dtype))),
+                layer, st)
+
+        return _map_state_layers(cfg, pool_cache, one, other=states)
+
+    return insert
+
+
+def make_state_reset_fn(cfg: ModelConfig):
+    """Slot-wise recurrent-state *reset*: (pool_cache, rows (R,)) ->
+    pool_cache with those REC/SSD rows zeroed (ATTN pools untouched)."""
+
+    def reset(pool_cache, rows):
+        def one(layer, kind, stacked):
+            if kind == ATTN:
+                return layer
+            return jax.tree_util.tree_map(
+                lambda t: (t.at[:, rows].set(0) if stacked
+                           else t.at[rows].set(0)), layer)
+
+        return _map_state_layers(cfg, pool_cache, one)
+
+    return reset
 
 
 class InferenceEngine:

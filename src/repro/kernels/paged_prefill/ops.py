@@ -28,32 +28,62 @@ def _on_tpu() -> bool:
 
 
 def _paged_prefill_jnp(q, kp, vp, block_tbl, q_pos, *,
-                       window: Optional[int] = None):
+                       window: Optional[int] = None,
+                       full_walk: bool = False):
     """Fused jnp block walk: same math as the kernel, blocked layout kept
-    throughout (the XLA analogue of the in-kernel walk)."""
+    throughout (the XLA analogue of the in-kernel walk).
+
+    Online-softmax ``fori_loop`` over logical blocks whose trip count is
+    the GROUP's max live block count — ``max(q_pos[:, -1]) // bs + 1``, a
+    traced scalar, so one compile covers every occupancy — instead of the
+    full table capacity MB (the kernel prunes in-grid on TPU; this is the
+    off-TPU analogue).  Blocks past a row's own position are fully masked
+    and contribute exact float identities (p = exp(-1e30 - m) underflows
+    to 0, corr = exp(0) = 1), so the bounded walk is bitwise-identical to
+    ``full_walk=True`` (all MB blocks — kept for the regression test)."""
     B, C, H, hd = q.shape
     K, _, bs, _ = kp.shape
     G = H // K
     MB = block_tbl.shape[1]
-    phys = jnp.maximum(block_tbl, 0)
-    kb = kp[:, phys]                                 # (K, B, MB, bs, hd)
-    vb = vp[:, phys]
-    qg = q.reshape(B, C, K, G, hd)
-    s = jnp.einsum("bckgh,kbmsh->bkgcms", qg.astype(jnp.float32),
-                   kb.astype(jnp.float32)) / math.sqrt(hd)
-    kpos = jnp.arange(MB)[:, None] * bs + jnp.arange(bs)[None, :]
-    qp = q_pos[:, :, None, None]                     # (B, C, 1, 1)
-    ok = (kpos[None, None] <= qp) & \
-        (block_tbl[:, None, :, None] >= 0)
-    if window is not None:
-        ok = ok & (kpos[None, None] > qp - window)
-    s = jnp.where(ok[:, None, None], s, NEG_INF)     # (B, K, G, C, MB, bs)
-    sf = s.reshape(B, K, G, C, MB * bs)
-    m = jnp.max(sf, axis=-1, keepdims=True)
-    p = jnp.exp(sf - m)
-    w = (p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
-         ).reshape(B, K, G, C, MB, bs)
-    o = jnp.einsum("bkgcms,kbmsh->bckgh", w, vb.astype(jnp.float32))
+    qg = q.reshape(B, C, K, G, hd).astype(jnp.float32)
+    sm = 1.0 / math.sqrt(hd)
+    if full_walk:
+        nb_live = MB
+    else:
+        nb_live = jnp.minimum(jnp.max(q_pos[:, -1]) // bs + 1, MB)
+
+    def body(j, carry):
+        m, l, acc = carry
+        phys = jnp.maximum(block_tbl[:, j], 0)       # (B,)
+        kb = kp[:, phys]                             # (K, B, bs, hd)
+        vb = vp[:, phys]
+        s = jnp.einsum("bckgh,kbsh->bckgs", qg,
+                       kb.astype(jnp.float32)) * sm  # (B, C, K, G, bs)
+        kpos = j * bs + jnp.arange(bs)               # (bs,)
+        qp = q_pos[:, :, None]                       # (B, C, 1)
+        ok = (kpos[None, None] <= qp) & \
+            (block_tbl[:, j] >= 0)[:, None, None]
+        if window is not None:
+            ok = ok & (kpos[None, None] > qp - window)
+        s = jnp.where(ok[:, :, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # masked keys are EXACT zeros (not exp(-1e30 - m), which is only 0
+        # once a real key raised m): an all-masked block is then a strict
+        # float identity (corr = exp(0) = 1, l += 0, acc += 0), which is
+        # what makes the bounded walk bitwise-equal to the full one
+        p = jnp.where(ok[:, :, None, None],
+                      jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bckgs,kbsh->bckgh", p, vb.astype(jnp.float32))
+        return m_new, l, acc
+
+    m0 = jnp.full((B, C, K, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, C, K, G), jnp.float32)
+    acc0 = jnp.zeros((B, C, K, G, hd), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, nb_live, body, (m0, l0, acc0))
+    o = acc / jnp.maximum(l[..., None], 1e-30)
     return o.reshape(B, C, H, hd).astype(q.dtype)
 
 

@@ -7,8 +7,9 @@ Cross-attention: static encoder K/V computed once at prefill.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.models.config import ATTN, REC, SSD, ModelConfig
@@ -80,36 +81,133 @@ def paged_attn_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
 
 
 def paging_unsupported_reason(cfg: ModelConfig) -> Optional[str]:
-    """None if the config can be served by the paged runtime.  Sliding-window
+    """None if the config can be served by the paged runtime.
+
+    ATTN layers page their K/V through the shared block pool; REC and SSD
+    layers carry fixed-size *per-slot state rows* beside the pool (see
+    ``slot_state_spec``), so hybrid (recurrentgemma-style) and fully
+    attention-free (mamba2-style) stacks are servable.  Sliding-window
     configs ARE servable: the paged decode masks by window in-kernel, and
     the runtime releases blocks that slide fully out of the window back to
     the pool mid-flight (``ServingConfig.window_reclamation`` — the mask
-    makes the release safe, never the other way around)."""
-    kinds = set(cfg.pattern) | set(cfg.remainder_layers)
-    if kinds != {ATTN}:
-        return f"paged serving needs attention-only stacks, got {sorted(kinds)}"
+    makes the release safe, never the other way around).  Only encoder /
+    cross-attention models stay out: their encoder K/V is per-request
+    static state keyed to frame embeddings the replay does not carry."""
     if cfg.cross_attention or cfg.encoder_layers:
         return "paged serving does not support encoder/cross-attention models"
     return None
 
 
-def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+# ------------------------------------------------------------ slot state
+# REC/SSD layers have no per-position K/V to page: their decode state is a
+# fixed-size recurrent summary of the WHOLE prefix (conv tail + hidden /
+# SSM state).  The serving runtime therefore keeps, per such layer, dense
+# ``(num_slots + 1, ...)`` state tensors beside the paged pools — one row
+# per decode slot plus a reserved *garbage row* (the last row, index
+# ``num_slots``) that plays the role GARBAGE_BLOCK plays for K/V writes:
+# prefill padding rows and stalled decode rows are redirected onto it so
+# their (discarded) computation can never advance a live slot's state.
+def has_slot_state(cfg: ModelConfig) -> bool:
+    """True if the stack contains REC/SSD layers (per-slot state rows)."""
+    kinds = set(cfg.pattern) | set(cfg.remainder_layers)
+    return bool(kinds & {REC, SSD})
+
+
+def slot_state_spec(kind: str, cfg: ModelConfig, dtype: Optional[Any] = None
+                    ) -> Dict[str, Tuple[Tuple[int, ...], Any]]:
+    """Per-slot dense state tensors for ONE layer of ``kind``:
+    name -> (per-slot shape, dtype).  ATTN layers return {} — their decode
+    state is paged K/V blocks, not slot rows."""
+    dtype = dtype or cfg.jnp_dtype
+    Di, W = cfg.d_inner, cfg.ssm_conv_width
+    if kind == REC:
+        return {"conv": ((W - 1, Di), dtype), "h": ((Di,), jnp.float32)}
+    if kind == SSD:
+        return {"conv": ((W - 1, Di), dtype),
+                "ssm": ((cfg.ssm_num_heads, cfg.ssm_head_dim,
+                         cfg.ssm_state_dim), jnp.float32)}
+    return {}
+
+
+def slot_state_cache(kind: str, cfg: ModelConfig, rows: int,
                      dtype: Optional[Any] = None) -> Cache:
-    """Full-model paged cache: same {"periods","tail"} pytree as init_cache,
-    but each attention layer holds a block pool instead of a per-row ring
-    buffer.  The block table lives outside the pytree (it is a decode-step
-    argument), so host-side allocation never rebuilds the cache."""
+    """One REC/SSD layer's slot-state tensors: {name: (rows, ...)}."""
+    return {k: jnp.zeros((rows,) + shp, dt)
+            for k, (shp, dt) in slot_state_spec(kind, cfg, dtype).items()}
+
+
+def state_bytes_per_slot(cfg: ModelConfig, dtype: Optional[Any] = None
+                         ) -> int:
+    """Bytes of dense recurrent state ONE slot pins across the whole stack
+    (the REC/SSD analogue of the per-slot paged-KV working set)."""
+    total = 0
+    layers = list(cfg.pattern) * cfg.num_periods + list(cfg.remainder_layers)
+    for kind in layers:
+        for _, (shp, dt) in slot_state_spec(kind, cfg, dtype).items():
+            n = 1
+            for d in shp:
+                n *= d
+            total += n * jnp.dtype(dt).itemsize
+    return total
+
+
+def gather_slot_state(state: Cache, rows, positions) -> Cache:
+    """Pull one layer's slot-state rows into dispatch-batch order.
+
+    ``rows``: (B,) int32 state-row per dispatch row (garbage row for
+    padding/stalled rows).  A row whose first position is 0 is starting a
+    fresh prompt on a recycled slot: it reads ZERO state instead of the
+    previous tenant's leftovers — admission never needs a reset dispatch."""
+    if positions.ndim == 2:
+        fresh = positions[:, 0] == 0
+    else:
+        fresh = jnp.broadcast_to(positions[0] == 0, rows.shape)
+
+    def one(t):
+        s = t[rows]
+        m = fresh.reshape((-1,) + (1,) * (s.ndim - 1))
+        return jnp.where(m, jnp.zeros_like(s), s)
+
+    return jax.tree_util.tree_map(one, state)
+
+
+def scatter_slot_state(state: Cache, new: Cache, rows) -> Cache:
+    """Write updated per-row state back to its slot rows (inverse of
+    ``gather_slot_state``; duplicate garbage-row writes may land in any
+    order — the garbage row is never read as real state)."""
+    return jax.tree_util.tree_map(
+        lambda full, s: full.at[rows].set(s.astype(full.dtype)), state, new)
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     dtype: Optional[Any] = None, *,
+                     num_slots: Optional[int] = None) -> Cache:
+    """Full-model paged cache: same {"periods","tail"} pytree as init_cache.
+    ATTN layers hold a block pool instead of a per-row ring buffer; REC/SSD
+    layers hold ``(num_slots + 1, ...)`` slot-state rows (last row =
+    garbage).  The block table lives outside the pytree (it is a
+    decode-step argument), so host-side allocation never rebuilds the
+    cache; slot-state rows are addressed by the ``state_rows`` decode/
+    prefill argument the same way."""
     reason = paging_unsupported_reason(cfg)
     if reason is not None:
         raise ValueError(reason)
     dtype = dtype or cfg.jnp_dtype
+    if has_slot_state(cfg) and num_slots is None:
+        raise ValueError(
+            "config has REC/SSD layers: init_paged_cache needs num_slots "
+            "to size the per-slot state rows (+1 garbage row)")
+
+    def one(kind: str) -> Cache:
+        if kind == ATTN:
+            return paged_attn_cache(cfg, num_blocks, block_size, dtype)
+        return slot_state_cache(kind, cfg, num_slots + 1, dtype)
+
     periods = {}
-    for j, _ in enumerate(cfg.pattern):
-        per = [paged_attn_cache(cfg, num_blocks, block_size, dtype)
-               for _ in range(cfg.num_periods)]
+    for j, kind in enumerate(cfg.pattern):
+        per = [one(kind) for _ in range(cfg.num_periods)]
         periods[f"p{j}"] = _stack(per)
-    tail = tuple(paged_attn_cache(cfg, num_blocks, block_size, dtype)
-                 for _ in cfg.remainder_layers)
+    tail = tuple(one(kind) for kind in cfg.remainder_layers)
     return {"periods": periods, "tail": tail}
 
 
@@ -121,7 +219,6 @@ def effective_cache_len(cfg: ModelConfig, context_len: int) -> int:
 
 
 def _stack(trees):
-    import jax
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
 
 

@@ -67,6 +67,31 @@ def lora_init(key, d_in: int, d_out: int, rank: int, dtype,
     }
 
 
+# ---------------------------------------------------------------- causal conv
+def causal_conv1d(xs, w, state=None, seq_lens=None):
+    """Depthwise causal conv shared by the REC and SSD mixers.
+
+    xs: (B, T, Di); w: (W, Di); state: (B, W-1, Di) carried inputs
+    (decode / chunked-prefill continuation).  ``seq_lens``: (B,) valid-
+    token counts — the returned tail state then holds the W-1 inputs
+    ENDING at each row's last valid token (chunk-tail padding junk must
+    not leak into the carried state); None keeps the plain last-W-1 tail.
+    Returns (out, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(xs.shape[:1] + (W - 1,) + xs.shape[2:], xs.dtype)
+    else:
+        pad = state.astype(xs.dtype)
+    xfull = jnp.concatenate([pad, xs], axis=1)          # (B, T+W-1, Di)
+    out = sum(xfull[:, i:i + xs.shape[1]] * w[i] for i in range(W))
+    if seq_lens is None:
+        return out, xfull[:, -(W - 1):]
+    # input of in-chunk token i sits at xfull index (W-1)+i; the tail ends
+    # at the last valid token, i.e. xfull[len : len + W - 1]
+    idx = (seq_lens[:, None] + jnp.arange(W - 1)[None, :]).astype(jnp.int32)
+    return out, jnp.take_along_axis(xfull, idx[..., None], axis=1)
+
+
 # ----------------------------------------------------------------------- norms
 def norm_init(d: int, kind: str, dtype) -> Params:
     p = {"scale": jnp.ones((d,), dtype)}

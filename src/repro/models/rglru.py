@@ -5,8 +5,11 @@
     a_t = exp(c · log(σ(Λ)) · r_t)    per-channel decay, c = 8
     h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
 
-Prefill/train evaluate the diagonal recurrence with
-``jax.lax.associative_scan`` (log-depth, sub-quadratic); decode is one step.
+Prefill/train evaluate the diagonal recurrence block-chunked: a log-depth
+``jax.lax.associative_scan`` inside each ``ssm_chunk``-token block and a
+sequential carry across blocks — the same op sequence whether a prompt is
+run whole or chunk at a time (serving continuation is bitwise-identical);
+decode is one step.
 The full block is conv1d + RG-LRU on one branch, GeLU on the other,
 multiplied and projected out (Griffin's recurrent block).  [arXiv:2402.19427]
 
@@ -23,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
-from repro.models.layers import _normal
+from repro.models.layers import _normal, causal_conv1d
 
 Params = Dict[str, Any]
 _C = 8.0
@@ -57,31 +60,58 @@ def _gates(p: Params, x):
     return a, i
 
 
-def rglru_scan(a, gated_x):
-    """h_t = a_t h_{t-1} + b_t via associative scan over T. a,b: (B,T,Di)."""
+def rglru_scan(a, gated_x, h0, block: int):
+    """h_t = a_t h_{t-1} + b_t over aligned ``block``-token blocks.
+
+    Associative (log-depth) scan INSIDE each block, sequential carry across
+    blocks, seeded by ``h0``.  Because the per-block op sequence depends
+    only on the block's own (a, b) values and the carry step is sequential,
+    evaluating one long prompt in a single call and evaluating it chunk by
+    chunk (serving chunked prefill, chunk a multiple of ``block``) execute
+    the SAME float ops — the results are bitwise-identical.  The tail pads
+    with the recurrence identity (a=1, b=0).  a, b: (B, T, Di) f32;
+    h0: (B, Di) f32.  Returns (h: (B, T, Di), h_last: (B, Di))."""
+    B, T, Di = a.shape
+    Q = block
+    padn = (-T) % Q
+    if padn:
+        a = jnp.pad(a, ((0, 0), (0, padn), (0, 0)), constant_values=1.0)
+        gated_x = jnp.pad(gated_x, ((0, 0), (0, padn), (0, 0)))
+    nc = (T + padn) // Q
+    ac = a.reshape(B, nc, Q, Di)
+    bc = gated_x.reshape(B, nc, Q, Di)
+
     def combine(e1, e2):
         a1, b1 = e1
         a2, b2 = e2
         return a1 * a2, b1 * a2 + b2
-    return jax.lax.associative_scan(combine, (a, gated_x), axis=1)[1]
 
+    cum_a, part = jax.lax.associative_scan(combine, (ac, bc), axis=2)
 
-def _causal_conv(xs, w, state=None):
-    W = w.shape[0]
-    if state is None:
-        pad = jnp.zeros(xs.shape[:1] + (W - 1,) + xs.shape[2:], xs.dtype)
-    else:
-        pad = state
-    xfull = jnp.concatenate([pad, xs], axis=1)
-    out = sum(xfull[:, i:i + xs.shape[1]] * w[i] for i in range(W))
-    return out, xfull[:, -(W - 1):]
+    def step(h, inp):
+        cA, pt = inp                                  # (B, Q, Di)
+        out = pt + cA * h[:, None]
+        return out[:, -1], out
+
+    h_last, outs = jax.lax.scan(
+        step, h0, (cum_a.transpose(1, 0, 2, 3), part.transpose(1, 0, 2, 3)))
+    h = outs.transpose(1, 0, 2, 3).reshape(B, nc * Q, Di)
+    return h[:, :T], h_last
 
 
 def apply_rglru_block(p: Params, cfg: ModelConfig, x, *,
                       state: Optional[Params] = None,
+                      seq_lens=None,
                       lora: Optional[Params] = None, lora_scaling: float = 1.0,
                       adapter_idx=None) -> Tuple[jnp.ndarray, Params]:
-    """x: (B, T, D). state: {"conv": (B, W-1, Di), "h": (B, Di)}."""
+    """x: (B, T, D). state: {"conv": (B, W-1, Di), "h": (B, Di)}.
+
+    T == 1 with state is the decode recurrence.  T > 1 with state is
+    *chunked-prefill continuation* (serving): the scan seeds from the
+    carried h and ``seq_lens`` (B,) marks each row's valid-token count —
+    positions past it are chunk-tail padding and are masked to the
+    recurrence identity so the returned state is exactly the state after
+    the last REAL token."""
     u = x @ p["w_branch"]["w"]
     if lora is not None and "in" in lora:
         a_l, b_l = lora["in"]["a"], lora["in"]["b"]
@@ -92,17 +122,24 @@ def apply_rglru_block(p: Params, cfg: ModelConfig, x, *,
             bg = jnp.take(b_l, adapter_idx, axis=0)
             u = u + lora_scaling * jnp.einsum(
                 "btr,bro->bto", jnp.einsum("btd,bdr->btr", x, ag), bg)
-    u, new_conv = _causal_conv(u, p["conv"], state["conv"] if state else None)
+    u, new_conv = causal_conv1d(
+        u, p["conv"], state["conv"] if state else None, seq_lens=seq_lens)
     a, i = _gates(p, u)
     gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * u.astype(jnp.float32)
 
-    if state is None:
-        h = rglru_scan(a, gated)                          # (B, T, Di)
+    T = x.shape[1]
+    if state is not None and T == 1:
+        h_prev = state["h"]                               # (B, Di)
+        h = a * h_prev[:, None] + gated                   # decode step
         h_last = h[:, -1]
     else:
-        h_prev = state["h"]                               # (B, Di)
-        h = a * h_prev[:, None] + gated                   # T == 1
-        h_last = h[:, -1]
+        h0 = state["h"] if state is not None else \
+            jnp.zeros((x.shape[0], a.shape[-1]), jnp.float32)
+        if seq_lens is not None:
+            valid = jnp.arange(T)[None, :, None] < seq_lens[:, None, None]
+            a = jnp.where(valid, a, 1.0)                  # identity steps
+            gated = jnp.where(valid, gated, 0.0)
+        h, h_last = rglru_scan(a, gated, h0, cfg.ssm_chunk)
 
     g = jax.nn.gelu(x @ p["w_gelu"]["w"]).astype(jnp.float32)
     y = (h * g).astype(x.dtype)

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
-from repro.models.layers import _normal, apply_norm, norm_init
+from repro.models.layers import _normal, apply_norm, causal_conv1d, norm_init
 
 Params = Dict[str, Any]
 
@@ -45,20 +45,6 @@ def _split(p: Params, cfg: ModelConfig, x):
     return z, xs, B, C, dt
 
 
-def _causal_conv(xs, w, state=None):
-    """Depthwise causal conv. xs: (B, T, Di); w: (W, Di).
-    state: (B, W-1, Di) previous inputs (decode). Returns (out, new_state)."""
-    W = w.shape[0]
-    if state is None:
-        pad = jnp.zeros(xs.shape[:1] + (W - 1,) + xs.shape[2:], xs.dtype)
-    else:
-        pad = state
-    xfull = jnp.concatenate([pad, xs], axis=1)          # (B, T+W-1, Di)
-    out = sum(xfull[:, i:i + xs.shape[1]] * w[i] for i in range(W))
-    new_state = xfull[:, -(W - 1):]
-    return out, new_state
-
-
 def _segsum(dtA):
     """dtA: (..., Q). Returns L (..., Q, Q): exp(sum_{j<k<=i} dtA_k), i>=j."""
     Q = dtA.shape[-1]
@@ -78,7 +64,13 @@ def ssd_chunked(xh, dt, a, B, C, chunk: int,
     """
     b, T, nh, hd = xh.shape
     S = B.shape[-1]
-    Q = min(chunk, T)
+    # Q is FIXED at ``chunk`` (never shrunk to T): block boundaries land at
+    # absolute multiples of chunk, so a prompt evaluated whole and the same
+    # prompt evaluated chunk-at-a-time (serving prefill slices, slice width
+    # a multiple of chunk, carried h0) execute identical per-block ops and
+    # an identical sequential block carry — bitwise-equal states.  Tail
+    # padding is the dt=0 identity either way.
+    Q = chunk
     T0 = T
     pad = (-T) % Q
     if pad:
@@ -138,11 +130,17 @@ def ssd_chunked(xh, dt, a, B, C, chunk: int,
 
 def apply_ssd(p: Params, cfg: ModelConfig, x, *,
               state: Optional[Params] = None,
+              seq_lens=None,
               lora: Optional[Params] = None, lora_scaling: float = 1.0,
               adapter_idx=None) -> Tuple[jnp.ndarray, Optional[Params]]:
     """Full Mamba-2 block. x: (B, T, D).
 
-    state (decode): {"conv": (B, W-1, Di), "ssm": (B, nh, hd, S)}.
+    state: {"conv": (B, W-1, Di), "ssm": (B, nh, hd, S)}.  T == 1 with
+    state is the O(1) decode recurrence; T > 1 with state is chunked-
+    prefill *continuation* (serving): the chunked scan seeds from the
+    carried SSM state, and ``seq_lens`` (B,) valid-token counts mask
+    chunk-tail padding to the dt=0 identity so the returned state is
+    exactly the state after each row's last real token.
     Returns (out, new_state)."""
     Bsz, T, D = x.shape
     Di, S, nh, hd = cfg.d_inner, cfg.ssm_state_dim, cfg.ssm_num_heads, cfg.ssm_head_dim
@@ -161,15 +159,19 @@ def apply_ssd(p: Params, cfg: ModelConfig, x, *,
         z, xs, Bm, Cm, dt = z + ez, xs + exs, Bm + eB, Cm + eC, dt + edt
 
     conv_state = state["conv"] if state is not None else None
-    xs, new_conv = _causal_conv(xs, p["conv"], conv_state)
+    xs, new_conv = causal_conv1d(xs, p["conv"], conv_state, seq_lens=seq_lens)
     xs = jax.nn.silu(xs)
 
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B, T, nh)
+    if seq_lens is not None:
+        valid = jnp.arange(T)[None, :, None] < seq_lens[:, None, None]
+        dt = jnp.where(valid, dt, 0.0)       # dt=0 ⇒ identity state step
     a = -jnp.exp(p["a_log"])                                      # (nh,) < 0
     xh = xs.reshape(Bsz, T, nh, hd)
 
-    if state is None:
-        y, h_final = ssd_chunked(xh, dt, a, Bm, Cm, cfg.ssm_chunk)
+    if state is None or T > 1:
+        h0 = state["ssm"] if state is not None else None
+        y, h_final = ssd_chunked(xh, dt, a, Bm, Cm, cfg.ssm_chunk, h0=h0)
     else:
         # O(1) decode recurrence (T == 1)
         h = state["ssm"]                                          # (B, nh, hd, S)

@@ -174,8 +174,16 @@ def _apply_layer(kind: str, lp: Params, cfg: ModelConfig, x, *, positions,
                  cache, mask_kind: str, prefix_len: int, adapter_idx,
                  enc_out, use_chunked: bool, fill_cache: bool,
                  block_tbl=None, chunk_ids=None,
-                 use_paged_kernel: bool = False):
-    """One residual block. Returns (x, new_cache, aux_loss)."""
+                 use_paged_kernel: bool = False,
+                 state_rows=None, state_seq=None):
+    """One residual block. Returns (x, new_cache, aux_loss).
+
+    ``state_rows`` (B,) int32 switches REC/SSD layers into *paged slot
+    state* mode (serving): the layer cache is (num_slots + 1, ...) rows,
+    each dispatch row gathers its slot's row (zeroed when it starts a
+    fresh prompt at position 0), runs decode (T == 1) or chunked-prefill
+    continuation (T > 1, ``state_seq`` valid-token counts masking the
+    chunk tail), and scatters the updated state back to its row."""
     aux = jnp.zeros((), jnp.float32)
     h = apply_norm(x, lp["norm1"], cfg.norm_type)
     new_cache = cache
@@ -224,17 +232,31 @@ def _apply_layer(kind: str, lp: Params, cfg: ModelConfig, x, *, positions,
             x = x + mixx
     elif kind == REC:
         lora = lp["rec"].get("lora")
-        mix, new_cache = apply_rglru_block(
-            lp["rec"], cfg, h, state=cache if not fill_cache else None,
-            lora=lora, lora_scaling=cfg.lora.scaling, adapter_idx=adapter_idx)
-        if fill_cache:
-            pass  # apply_rglru_block already returns final state
+        if state_rows is not None and cache is not None:
+            st = cache_lib.gather_slot_state(cache, state_rows, positions)
+            mix, upd = apply_rglru_block(
+                lp["rec"], cfg, h, state=st, seq_lens=state_seq, lora=lora,
+                lora_scaling=cfg.lora.scaling, adapter_idx=adapter_idx)
+            new_cache = cache_lib.scatter_slot_state(cache, upd, state_rows)
+        else:
+            mix, new_cache = apply_rglru_block(
+                lp["rec"], cfg, h, state=cache if not fill_cache else None,
+                lora=lora, lora_scaling=cfg.lora.scaling,
+                adapter_idx=adapter_idx)
         x = x + mix
     elif kind == SSD:
         lora = lp["ssd"].get("lora")
-        mix, new_cache = apply_ssd(
-            lp["ssd"], cfg, h, state=cache if not fill_cache else None,
-            lora=lora, lora_scaling=cfg.lora.scaling, adapter_idx=adapter_idx)
+        if state_rows is not None and cache is not None:
+            st = cache_lib.gather_slot_state(cache, state_rows, positions)
+            mix, upd = apply_ssd(
+                lp["ssd"], cfg, h, state=st, seq_lens=state_seq, lora=lora,
+                lora_scaling=cfg.lora.scaling, adapter_idx=adapter_idx)
+            new_cache = cache_lib.scatter_slot_state(cache, upd, state_rows)
+        else:
+            mix, new_cache = apply_ssd(
+                lp["ssd"], cfg, h, state=cache if not fill_cache else None,
+                lora=lora, lora_scaling=cfg.lora.scaling,
+                adapter_idx=adapter_idx)
         x = x + mix
     else:
         raise ValueError(kind)
@@ -278,7 +300,8 @@ def encode(params: Params, cfg: ModelConfig, frame_embeds) -> jnp.ndarray:
 def _run_stack(params, cfg: ModelConfig, x, *, positions, cache, mask_kind,
                prefix_len, adapter_idx, enc_out, use_chunked, fill_cache,
                remat: bool, block_tbl=None, chunk_ids=None,
-               use_paged_kernel: bool = False):
+               use_paged_kernel: bool = False,
+               state_rows=None, state_seq=None):
     pat = cfg.pattern
     aux_total = jnp.zeros((), jnp.float32)
 
@@ -294,7 +317,8 @@ def _run_stack(params, cfg: ModelConfig, x, *, positions, cache, mask_kind,
                 adapter_idx=adapter_idx, enc_out=enc_out,
                 use_chunked=use_chunked, fill_cache=fill_cache,
                 block_tbl=block_tbl, chunk_ids=chunk_ids,
-                use_paged_kernel=use_paged_kernel)
+                use_paged_kernel=use_paged_kernel,
+                state_rows=state_rows, state_seq=state_seq)
             new_cs[f"p{j}"] = nc
             aux = aux + a
         return (x, aux), new_cs
@@ -320,7 +344,8 @@ def _run_stack(params, cfg: ModelConfig, x, *, positions, cache, mask_kind,
             adapter_idx=adapter_idx, enc_out=enc_out,
             use_chunked=use_chunked, fill_cache=fill_cache,
             block_tbl=block_tbl, chunk_ids=chunk_ids,
-            use_paged_kernel=use_paged_kernel)
+            use_paged_kernel=use_paged_kernel,
+            state_rows=state_rows, state_seq=state_seq)
         new_tail.append(nc)
         aux_total = aux_total + a
 
@@ -347,7 +372,8 @@ def forward(params: Params, cfg: ModelConfig, tokens, *,
             last_pos: Optional[jnp.ndarray] = None,
             start_pos: Optional[jnp.ndarray] = None,
             block_tbl=None, chunk_ids=None,
-            use_paged_kernel: bool = False
+            use_paged_kernel: bool = False,
+            state_rows=None
             ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
     """Train (cache=None) or prefill (cache=zeros pytree → filled).
 
@@ -357,6 +383,10 @@ def forward(params: Params, cfg: ModelConfig, tokens, *,
     offsets the positions to ``start_pos[b] + [0, T)``, ``chunk_ids``
     (B, T//bs) names the pool blocks this chunk writes, and ``block_tbl``
     (B, MB) maps the row's full logical history for attention.
+    ``state_rows`` (B,) maps each row to its REC/SSD slot-state row
+    (hybrid serving): chunk r > 0 continues the recurrent scan from the
+    carried state, and ``last_pos`` doubles as the in-chunk valid-token
+    bound so chunk-tail padding never advances the state.
     Returns (logits, filled_cache, aux_loss)."""
     B, T = tokens.shape
     x = _constrain(jnp.take(params["embed"], tokens, axis=0))
@@ -376,12 +406,16 @@ def forward(params: Params, cfg: ModelConfig, tokens, *,
     if use_chunked is None:
         use_chunked = Ttot > 2048
     mask_kind = "prefix" if prefix_len else "causal"
+    state_seq = None
+    if state_rows is not None and last_pos is not None:
+        state_seq = last_pos.astype(jnp.int32) + 1
     x, new_cache, aux = _run_stack(
         params, cfg, x, positions=positions, cache=cache, mask_kind=mask_kind,
         prefix_len=prefix_len, adapter_idx=adapter_idx, enc_out=enc_out,
         use_chunked=use_chunked, fill_cache=cache is not None, remat=remat,
         block_tbl=block_tbl, chunk_ids=chunk_ids,
-        use_paged_kernel=use_paged_kernel)
+        use_paged_kernel=use_paged_kernel,
+        state_rows=state_rows, state_seq=state_seq)
     if last_pos is not None:
         # bucketed serving prefill: rows are right-padded, so the logit that
         # samples the first output token lives at a per-row index, not -1
@@ -401,14 +435,18 @@ def forward(params: Params, cfg: ModelConfig, tokens, *,
 
 def decode_step(params: Params, cfg: ModelConfig, token, cache, pos, *,
                 adapter_idx=None, block_tbl=None,
-                use_paged_kernel: bool = False
+                use_paged_kernel: bool = False,
+                state_rows=None
                 ) -> Tuple[jnp.ndarray, Dict]:
     """ONE decode step. token: (B,) int32; pos: () int32 absolute position,
     or (B,) int32 per-row positions (continuous batching: each slot decodes
     at its own depth); cache: filled cache pytree — contiguous ring caches,
     or a paged block-pool cache addressed via block_tbl (B, MB) int32.
     ``use_paged_kernel`` routes paged attention through the in-kernel
-    block-table walk instead of the gather reference.
+    block-table walk instead of the gather reference.  ``state_rows``
+    (B,) int32 addresses REC/SSD per-slot state rows (hybrid serving) —
+    rows redirected to the garbage row (stalled slots) compute on junk and
+    write junk back there, leaving their real state untouched.
     Returns (logits (B, V), new_cache)."""
     B = token.shape[0]
     x = _constrain(jnp.take(params["embed"], token[:, None],
@@ -422,7 +460,8 @@ def decode_step(params: Params, cfg: ModelConfig, token, cache, pos, *,
         params, cfg, x, positions=positions, cache=cache, mask_kind="causal",
         prefix_len=0, adapter_idx=adapter_idx, enc_out=None,
         use_chunked=False, fill_cache=False, remat=False,
-        block_tbl=block_tbl, use_paged_kernel=use_paged_kernel)
+        block_tbl=block_tbl, use_paged_kernel=use_paged_kernel,
+        state_rows=state_rows)
     return _logits(params, cfg, x)[:, 0], new_cache
 
 

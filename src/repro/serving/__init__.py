@@ -12,7 +12,9 @@ Layout:
                    pool blocks, no bucket cache + scatter); requests join
                    and leave mid-decode, no re-jit; prefix-shared
                    admission skips covered-token compute; sliding-window
-                   reclamation.
+                   reclamation; hybrid REC/SSD stacks carry per-slot
+                   recurrent-state rows beside the pools (docs/serving.md
+                   "Hybrid slot state").
   * ``replay``   — feeds ``serverless.traces`` arrival streams through the
                    runtime and emits simulator-compatible Request records.
 """

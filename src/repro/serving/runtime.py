@@ -55,6 +55,27 @@ caps total sequence length (logical index == absolute position).
 
 Both features are host-side block-table/lifecycle work: the compiled
 decode step is untouched (block tables stay host-side arguments).
+
+Hybrid REC/SSD slot state: attention-free and hybrid stacks (mamba2,
+recurrentgemma) carry, per REC/SSD layer, dense ``(num_slots + 1, ...)``
+recurrent-state rows beside the paged pools (conv tail + hidden/SSM
+state; last row = garbage, the state analogue of the garbage block).
+Every prefill/decode dispatch carries a ``state_rows`` vector mapping
+dispatch rows to state rows: prefill initializes a recycled row in-step
+(a row starting at position 0 reads zero state), chunked prefill chunks
+continue the recurrent scan from the carried row, and decode updates it
+in the same compiled step as the KV write.  Two invariants differ from
+the ATTN paths: (1) recurrent state summarizes the WHOLE prefix, so
+prefix-shared admissions skip block *writes* but never compute — the
+chunk loop starts at token 0 for stacks with state (ATTN layers still
+map shared blocks: memory dedup survives, compute dedup does not); and
+(2) a stalled slot's state row is redirected to the garbage row for the
+stalled chunk — KV writes are re-written identically by the resume, but
+a recurrent row would advance twice, so the redirect is what keeps
+stall-and-resume a no-op.  State rows are per-request and never shared:
+a row is mutated by every decode step, and its value at position t
+depends on the entire prefix, so (unlike immutable per-position KV
+blocks) there is nothing safely shareable.
 """
 from __future__ import annotations
 
@@ -67,9 +88,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import make_chunked_prefill_step, make_serve_step
-from repro.models.cache import (GARBAGE_BLOCK, init_paged_cache,
-                                paging_unsupported_reason)
-from repro.models.config import ModelConfig
+from repro.models.cache import (GARBAGE_BLOCK, has_slot_state,
+                                init_paged_cache, paging_unsupported_reason)
+from repro.models.config import ATTN, ModelConfig
 from repro.serverless.batching import Request
 from repro.serving.kv_pool import BlockPool, blocks_for_tokens
 from repro.serving.prefix import PrefixCache
@@ -137,14 +158,32 @@ class ContinuousRuntime:
                 f"multiple of block_size {scfg.block_size}")
         if scfg.prefill_rows < 1:
             raise ValueError("prefill_rows must be >= 1")
+        self.has_state = has_slot_state(cfg)
+        # attention-free stacks (pure SSD/REC) have no K/V to page: no
+        # blocks are charged or allocated, capacity is NOT bounded by the
+        # block table (the families' O(1)-state selling point), prefix
+        # sharing is off (there are no block contents to dedup), and
+        # decode can never stall on pool exhaustion
+        self.needs_kv = ATTN in (set(cfg.pattern)
+                                 | set(cfg.remainder_layers))
+        if self.has_state and scfg.prefill_chunk % cfg.ssm_chunk:
+            raise ValueError(
+                f"prefill_chunk {scfg.prefill_chunk} must be a multiple of "
+                f"ssm_chunk {cfg.ssm_chunk} for REC/SSD stacks: recurrent "
+                f"scans run in ssm_chunk-aligned blocks so chunk-at-a-time "
+                f"prefill stays bitwise-equal to whole-prompt prefill")
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
         self.pool = BlockPool(scfg.num_blocks, scfg.block_size)
         self.slots = SlotTable(scfg.num_slots, scfg.max_blocks_per_slot)
-        self.cache = init_paged_cache(cfg, scfg.num_blocks, scfg.block_size)
+        # REC/SSD state rows: one per slot + the trailing garbage row
+        self.garbage_state_row = scfg.num_slots
+        self.cache = init_paged_cache(
+            cfg, scfg.num_blocks, scfg.block_size,
+            num_slots=scfg.num_slots if self.has_state else None)
         self.prefix: Optional[PrefixCache] = None
-        if scfg.prefix_sharing:
+        if scfg.prefix_sharing and self.needs_kv:
             self.prefix = PrefixCache(scfg.block_size)
             # freed prompt blocks park in the pool's cached LRU while the
             # prefix index maps them; eviction drops the mapping
@@ -168,12 +207,13 @@ class ContinuousRuntime:
         serve = make_serve_step(cfg)
         chunk_step = make_chunked_prefill_step(cfg)
 
-        def decode_chunk(params, tok, cache, pos, tbl, ai):
+        def decode_chunk(params, tok, cache, pos, tbl, ai, srows):
             def body(carry, _):
                 tok, cache, pos = carry
                 logits, cache = serve(params, tok, cache, pos,
                                       adapter_idx=ai, block_tbl=tbl,
-                                      use_paged_kernel=scfg.use_kernel)
+                                      use_paged_kernel=scfg.use_kernel,
+                                      state_rows=srows)
                 nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
                 return (nxt, cache, pos + 1), nxt
 
@@ -182,35 +222,44 @@ class ContinuousRuntime:
             return toks.T, cache                       # (B, K)
 
         def prefill_chunk(params, tokens, start, last_idx, ai, pool_cache,
-                          chunk_ids, tbl):
+                          chunk_ids, tbl, srows):
             """ONE slice of the join path: write this chunk's K/V straight
-            into pool blocks and sample the logit at ``last_idx`` (the
+            into pool blocks (REC/SSD layers: advance the slot-state rows
+            named by ``srows``) and sample the logit at ``last_idx`` (the
             final chunk's logit is the request's first output token).
             Admission happens between decode chunks, so its dispatch
             overhead is pure decode stall — and there is exactly one such
             compiled shape for every prompt length."""
             return chunk_step(params, tokens, start, last_idx, pool_cache,
                               chunk_ids, tbl, adapter_idx=ai,
-                              use_paged_kernel=scfg.use_kernel)
+                              use_paged_kernel=scfg.use_kernel,
+                              state_rows=srows)
 
         self._decode = jax.jit(decode_chunk, donate_argnums=(2,))
         self._prefill = jax.jit(prefill_chunk, donate_argnums=(5,))
 
     # ------------------------------------------------------------ capacity
     def max_output_for(self, prompt_len: int) -> int:
-        """Largest output_len a request with this prompt can be granted."""
+        """Largest output_len a request with this prompt can be granted.
+        Attention-free stacks are not KV-bounded: their whole decode state
+        is a fixed-size slot row, so any int32-positionable length fits."""
+        if not self.needs_kv:
+            return 2 ** 31 - 1 - prompt_len
         cap = self.scfg.max_blocks_per_slot * self.scfg.block_size
         return cap - prompt_len + 1        # last KV write is L + out - 2
 
     def fits(self, prompt_len: int, output_len: int) -> bool:
         """Capacity is the block table, not a bucket set: the last KV
         write (position prompt_len + output_len - 2, or prompt_len - 1
-        for single-token requests) must land inside max_blocks_per_slot."""
+        for single-token requests) must land inside max_blocks_per_slot.
+        Attention-free stacks always fit (no KV to place)."""
         if prompt_len < 1 or output_len < 1:
             return False
         return output_len <= self.max_output_for(prompt_len)
 
     def admit_cost_blocks(self, prompt_len: int, output_len: int = 2) -> int:
+        if not self.needs_kv:
+            return 0                       # nothing to page for REC/SSD-only
         # blocks covering positions 0..prompt_len: the prompt plus the first
         # decode write at position L — which never happens for single-token
         # requests (they finish at prefill)
@@ -270,7 +319,7 @@ class ContinuousRuntime:
         return plans, registered
 
     def _chunk_prefill(self, items: Sequence[Tuple[np.ndarray, int,
-                                                   List[int], int]]
+                                                   List[int], int, int]]
                        ) -> List[int]:
         """Advance up to ``prefill_rows`` prompts' chunk loops side by side
         against the pool cache, one fixed (prefill_rows, prefill_chunk)
@@ -280,20 +329,28 @@ class ContinuousRuntime:
         out) — each row only reads its own earlier rounds, prior requests'
         blocks, or same-round writes of its own row.
 
-        Each item is (prompt, adapter, blocks, covered_blk); the loop
+        Each item is (prompt, adapter, blocks, covered_blk, sid); the loop
         starts at the first prefix-uncovered token (a fully covered prompt
         still recomputes its last block: the first-token logit needs
-        position L-1's hidden state, which only compute yields).  Returns
-        the per-item first output tokens, sampled from each item's final
-        chunk logit."""
+        position L-1's hidden state, which only compute yields).  Stacks
+        with REC/SSD layers always start at token 0 — the recurrent state
+        must integrate every prefix token, so shared blocks skip the WRITE
+        but never the compute — and each round maps dispatch row i to the
+        item's slot-state row ``sid`` (finished/padding rows map to the
+        garbage row; the first chunk reads zero state because it starts at
+        position 0).  Returns the per-item first output tokens, sampled
+        from each item's final chunk logit."""
         scfg = self.scfg
         bs, C = scfg.block_size, scfg.prefill_chunk
         G, MB = scfg.prefill_rows, scfg.max_blocks_per_slot
         assert 0 < len(items) <= G
         starts: List[List[int]] = []
-        for prompt, _, _, cov in items:
+        for prompt, _, _, cov, _ in items:
             L = len(prompt)
-            start_tok = min(cov * bs, ((L - 1) // bs) * bs)
+            if self.has_state:
+                start_tok = 0
+            else:
+                start_tok = min(cov * bs, ((L - 1) // bs) * bs)
             starts.append(list(range(start_tok, L, C)))
             self.stats["recomputed_tokens"] += L - start_tok
         nb_c = C // bs
@@ -308,7 +365,8 @@ class ContinuousRuntime:
             ai = np.zeros((G,), np.int32)
             ids = np.full((G, nb_c), GARBAGE_BLOCK, np.int32)
             tbl = np.full((G, MB), -1, np.int32)
-            for i, (prompt, adapter, blocks, cov) in enumerate(items):
+            srows = np.full((G,), self.garbage_state_row, np.int32)
+            for i, (prompt, adapter, blocks, cov, sid) in enumerate(items):
                 if r >= len(starts[i]):
                     continue             # finished: garbage row
                 c0 = starts[i][r]
@@ -319,6 +377,7 @@ class ContinuousRuntime:
                 last_idx[i] = min(max(L - 1 - c0, 0), C - 1)
                 ai[i] = adapter
                 tbl[i, : len(blocks)] = blocks
+                srows[i] = sid
                 for jj in range(nb_c):
                     j = c0 // bs + jj
                     # skip shared blocks (they already hold exactly these
@@ -330,7 +389,7 @@ class ContinuousRuntime:
             lg, self.cache = self._prefill(
                 self.params, jnp.asarray(tok), jnp.asarray(start),
                 jnp.asarray(last_idx), jnp.asarray(ai), self.cache,
-                jnp.asarray(ids), jnp.asarray(tbl))
+                jnp.asarray(ids), jnp.asarray(tbl), jnp.asarray(srows))
             if r in final_rounds:
                 logits[r] = lg
             self.stats["prefill_chunks"] += 1
@@ -400,6 +459,12 @@ class ContinuousRuntime:
                 independent.append(i)
             group_reg.update(registered[i])
 
+        # slots are bound AFTER prefill, but state rows must be known
+        # DURING it (chunk r+1 continues from the state chunk r left in the
+        # slot's row), so each surviving item pre-claims free[i] — the same
+        # sid the binding loop below uses
+        sids = [free[i] for i in range(len(kept))]
+
         bs = scfg.block_size
         t0 = time.perf_counter()
         firsts: Dict[int, int] = {}
@@ -411,7 +476,7 @@ class ContinuousRuntime:
                 continue
             got = self._chunk_prefill(
                 [(kept[i][1], kept[i][2], plans[i][0] + plans[i][1],
-                  len(plans[i][0])) for i in batch_idx])
+                  len(plans[i][0]), sids[i]) for i in batch_idx])
             firsts.update(zip(batch_idx, got))
         total_dt = time.perf_counter() - t0
 
@@ -426,7 +491,7 @@ class ContinuousRuntime:
             self.stats["prefill_tokens"] += L - cov
             self.stats["shared_block_maps"] += len(shared)
 
-            sid = free[i]
+            sid = sids[i]
             st = SlotState(sid=sid, req=req, adapter=adapter, prompt_len=L,
                            budget=max(req.output_len, 1), pos=L,
                            blocks=shared + fresh, last_token=first,
@@ -453,8 +518,13 @@ class ContinuousRuntime:
     # -------------------------------------------------------------- decode
     def _ensure_blocks(self) -> Tuple[List[int], List[SlotState]]:
         """On-demand allocation for this chunk's writes; stall on shortage,
-        force-evict one slot if *everyone* stalls (progress guarantee)."""
+        force-evict one slot if *everyone* stalls (progress guarantee).
+        Attention-free stacks never allocate and never stall."""
         scfg, aborted = self.scfg, []
+        if not self.needs_kv:
+            for s in self.slots.active():
+                s.stalled = False
+            return [], aborted
         while True:
             stalled = []
             for s in self.slots.active():
@@ -488,15 +558,19 @@ class ContinuousRuntime:
             return DecodeResult({}, [], aborted, stalled, 0.0)
 
         # Stalled slots run the chunk unmodified from (pending token, pos):
-        # writes into their allocated blocks are bit-identical to the writes
-        # the eventual resume will make (greedy decode is deterministic), and
-        # writes past the allocated suffix clip to the garbage block — so
+        # every KV position the stalled chunk writes is re-written by the
+        # resumed chunk before it can be attended (decode writes position
+        # pos+t at scan step t, then attends <= pos+t), writes past the
+        # allocated suffix clip to the garbage block, and the slot's
+        # REC/SSD state row is redirected to the garbage state row
+        # (slots.state_rows) so the recurrence cannot advance twice — so
         # discarding the outputs and not advancing pos is a true no-op.
         t0 = time.perf_counter()
         toks, self.cache = self._decode(
             self.params, jnp.asarray(self.slots.tokens), self.cache,
             jnp.asarray(self.slots.pos), jnp.asarray(self.slots.block_tbl),
-            jnp.asarray(self.slots.adapter))
+            jnp.asarray(self.slots.adapter),
+            jnp.asarray(self.slots.state_rows(self.garbage_state_row)))
         toks = np.asarray(toks)                            # (B, K), sync
         dt = time.perf_counter() - t0
 
@@ -558,11 +632,15 @@ class ContinuousRuntime:
         ids = jnp.full((G, C // scfg.block_size), GARBAGE_BLOCK, jnp.int32)
         tbl = jnp.full((G, scfg.max_blocks_per_slot), -1, jnp.int32)
         zeros = jnp.zeros((G,), jnp.int32)
+        # warmup rows write the garbage state row only (real slot rows stay
+        # untouched, same as the garbage block for K/V)
+        g_pre = jnp.full((G,), self.garbage_state_row, jnp.int32)
+        g_dec = jnp.full((scfg.num_slots,), self.garbage_state_row, jnp.int32)
         for rep in range(2):
             t0 = time.perf_counter()
             lg, self.cache = self._prefill(
                 self.params, jnp.zeros((G, C), jnp.int32), zeros, zeros,
-                zeros, self.cache, ids, tbl)
+                zeros, self.cache, ids, tbl, g_pre)
             np.asarray(lg)
             timings["prefill_chunk_s"] = time.perf_counter() - t0
         for rep in range(2):
@@ -571,7 +649,7 @@ class ContinuousRuntime:
                 self.params, jnp.asarray(self.slots.tokens), self.cache,
                 jnp.asarray(self.slots.pos),
                 jnp.asarray(self.slots.block_tbl),
-                jnp.asarray(self.slots.adapter))
+                jnp.asarray(self.slots.adapter), g_dec)
             np.asarray(toks)
             timings["decode_chunk_s"] = time.perf_counter() - t0
         return timings

@@ -1,0 +1,103 @@
+"""Markdown link checker for README.md and docs/*.md.
+
+Every *relative* link target must exist in the repo, and every in-file
+anchor (``#section``) must match a real heading (GitHub slug rules:
+lowercase, spaces -> hyphens, punctuation dropped).  External http(s)
+links are not fetched — CI must not depend on the network.
+
+Runs under pytest (tier-1) AND standalone (``python tests/test_docs.py``)
+so the CI smoke job, which installs no pytest, can gate on it too.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import List, Tuple
+
+REPO = Path(__file__).resolve().parent.parent
+
+_LINK = re.compile(r"(?<!!)\[[^\]]+\]\(([^)\s]+)\)")
+_IMAGE = re.compile(r"!\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_CODE_FENCE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def _docs() -> List[Path]:
+    files = [REPO / "README.md"]
+    files += sorted((REPO / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug: strip markdown markup + punctuation,
+    lowercase, spaces to hyphens."""
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def _anchors(md: str) -> set:
+    return {_slug(m.group(1)) for m in _HEADING.finditer(md)}
+
+
+def check_file(path: Path) -> List[Tuple[str, str]]:
+    """Returns (link, problem) pairs for every broken relative link."""
+    md = path.read_text()
+    bad: List[Tuple[str, str]] = []
+    plain = _CODE_FENCE.sub("", md)
+    for pat in (_LINK, _IMAGE):
+        for m in pat.finditer(plain):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            base, _, anchor = target.partition("#")
+            dest = path if not base else (path.parent / base).resolve()
+            if base and not dest.exists():
+                bad.append((target, f"missing file {base}"))
+                continue
+            if anchor:
+                if dest.suffix != ".md":
+                    continue
+                if _slug(anchor) not in _anchors(dest.read_text()):
+                    bad.append((target, f"missing anchor #{anchor} "
+                                        f"in {dest.name}"))
+    return bad
+
+
+def test_readme_exists_with_required_sections():
+    readme = REPO / "README.md"
+    assert readme.exists(), "README.md missing (ISSUE 5 satellite)"
+    md = readme.read_text()
+    for needle in ("docs/serving.md", "docs/architecture.md",
+                   "python -m pytest"):
+        assert needle in md, f"README.md must reference {needle}"
+    assert (REPO / "docs" / "architecture.md").exists()
+
+
+def test_markdown_links_resolve():
+    problems = []
+    for f in _docs():
+        for link, why in check_file(f):
+            problems.append(f"{f.relative_to(REPO)}: ({link}) -> {why}")
+    assert not problems, "broken markdown links:\n" + "\n".join(problems)
+
+
+def main() -> int:
+    rc = 0
+    for f in _docs():
+        bad = check_file(f)
+        for link, why in bad:
+            print(f"BROKEN {f.relative_to(REPO)}: ({link}) -> {why}")
+            rc = 1
+    if not (REPO / "README.md").exists():
+        print("BROKEN: README.md missing")
+        rc = 1
+    if rc == 0:
+        print(f"ok: {len(_docs())} markdown files, all relative links "
+              f"resolve")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

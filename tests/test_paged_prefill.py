@@ -73,6 +73,31 @@ def test_fused_jnp_matches_oracle():
                                    atol=3e-5, rtol=3e-5)
 
 
+def test_fused_jnp_bounded_walk_bitwise():
+    """ROADMAP 'remaining' fix: the off-TPU chunk walk is bounded by the
+    group's max live block count instead of the full table capacity.
+    Skipped blocks are strict float identities, so the bounded walk must
+    equal full_walk=True BIT-FOR-BIT — including rows with a garbage
+    (all -1) table and reclaimed (-1) leading entries."""
+    for win in (None, 6):
+        q, kp, vp, tbl, q_pos = _mk(3, 8, 2, 2, 32, 4, 16, 32, seed=13)
+        tbl = np.asarray(tbl).copy()
+        tbl[1, :] = -1                      # garbage row (padding slot)
+        q_pos = np.asarray(q_pos).copy()
+        q_pos[0] = np.arange(20, 28)        # deepest row: 7 live blocks
+        q_pos[1] = np.arange(8)
+        q_pos[2] = np.arange(9, 17)
+        if win is not None:
+            tbl[2, 0] = -1                  # window-reclaimed leading block
+        tbl, q_pos = jnp.asarray(tbl), jnp.asarray(q_pos)
+        bounded = _paged_prefill_jnp(q, kp, vp, tbl, q_pos, window=win)
+        full = _paged_prefill_jnp(q, kp, vp, tbl, q_pos, window=win,
+                                  full_walk=True)
+        np.testing.assert_array_equal(np.asarray(bounded), np.asarray(full))
+        # and the bound actually prunes: live blocks < table capacity
+        assert int(np.max(np.asarray(q_pos)[:, -1]) // 4 + 1) < tbl.shape[1]
+
+
 def test_q_tile_split_invariance():
     """Splitting the chunk into q tiles must not change results (the tile
     skip guard prunes future/stale kv steps, never valid ones)."""

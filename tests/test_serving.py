@@ -63,12 +63,31 @@ def test_block_pool_free_is_atomic():
     assert pool.in_use == 0 and pool.available == 7
 
 
-def test_paging_unsupported_configs_rejected():
-    cfg = get_smoke("recurrentgemma_9b")   # rec mixers in the pattern
-    assert paging_unsupported_reason(cfg) is not None
+def test_paging_support_matrix_over_all_configs():
+    """Every registered config is either servable by the paged runtime or
+    rejected with a reason naming WHY.  Since hybrid/attention-free stacks
+    grew per-slot state rows, only encoder/cross-attention models remain
+    out (their encoder K/V is keyed to frame embeddings the replay does
+    not carry)."""
+    from repro.configs import ARCH_IDS
+    from repro.models.cache import has_slot_state
+
+    rejected = {"whisper_medium"}         # encoder-decoder audio
+    needs_state = {"recurrentgemma_9b", "mamba2_780m"}
+    for arch in ARCH_IDS:
+        cfg = get_smoke(arch)
+        reason = paging_unsupported_reason(cfg)
+        if arch in rejected:
+            assert reason is not None and "encoder" in reason, (arch, reason)
+            with pytest.raises(ValueError):
+                init_paged_cache(cfg, 8, 4, num_slots=2)
+        else:
+            assert reason is None, (arch, reason)
+        assert has_slot_state(cfg) == (arch in needs_state), arch
+    # REC/SSD state rows are sized by num_slots: forgetting it must be a
+    # loud error, not a silently stateless cache
     with pytest.raises(ValueError):
-        init_paged_cache(cfg, 8, 4)
-    assert paging_unsupported_reason(get_smoke("llama2_7b")) is None
+        init_paged_cache(get_smoke("mamba2_780m"), 8, 4)
     # sliding-window configs are servable: the paged decode masks the
     # window in-kernel (block reclamation is an optimization, not a gate)
     swa = get_smoke("llama2_7b").with_(sliding_window=8)
