@@ -15,6 +15,15 @@ block pool.
 Asserts (issue acceptance): continuous throughput >= static throughput, and
 the decode step compiles exactly once after warmup.
 
+Also reports the **host-bubble fraction** — host-plan wall time / total
+wall time between the first admit dispatch and the last finish dispatch
+(the share of the serving window the device spent idle while the host
+planned admission, block tables, and numpy mirrors).  This is the metric
+the ROADMAP's async-overlap item is gated on: the overlap win must be
+measured against this baseline, not assumed.  The headline numbers plus
+the runtime's full metrics snapshot are recorded under
+``results/BENCH_serving.json`` (``common.record_bench``).
+
 Run: PYTHONPATH=src python -m benchmarks.bench_continuous
 """
 from __future__ import annotations
@@ -182,9 +191,15 @@ def run(adapters: int = 3, rate: float = 200.0, duration: float = 1.0,
         max(rows["static-fixed-batch"]["tok_per_s"], 1e-9)
     compiles = rt.decode_compiles()
     pf_compiles = rt.prefill_compiles()
+    bubble = rt.host_bubble_fraction()
+    rows["continuous-real"]["host_bubble_frac"] = bubble
     print(f"\ncontinuous/static throughput: {speedup:.2f}x")
+    print(f"host-bubble fraction: {bubble:.3f} "
+          f"(host-plan wall time / wall time between first admit and "
+          f"last finish — the async-overlap headroom)")
     print(f"decode compiles after warmup: {compiles}, "
           f"prefill compiles: {pf_compiles}")
+    assert 0.0 <= bubble <= 1.0, f"host-bubble fraction {bubble} not in [0,1]"
     # throughput comparison is only meaningful under backlog: when both
     # systems drain arrivals in real time, tok/s is arrival-limited on both
     # sides and the ratio is measurement noise around 1.0
@@ -203,7 +218,31 @@ def run(adapters: int = 3, rate: float = 200.0, duration: float = 1.0,
         f"decode step re-jitted mid-serving ({compiles} cache entries)"
     assert pf_compiles in (1, -1), \
         f"chunked prefill re-jitted mid-serving ({pf_compiles} entries)"
+
+    from benchmarks.common import record_bench
+    path = record_bench("bench_continuous", {
+        "rows": rows,
+        "speedup_vs_static": speedup,
+        "host_bubble_fraction": bubble,
+        "metrics": rt.metrics_snapshot(),
+    })
+    print(f"metrics snapshot -> {path}")
     return rows
+
+
+def run_csv(quick: bool = False) -> List[str]:
+    """``benchmarks.run`` driver entry: run the quick comparison, emit
+    CSV rows, and leave BENCH_serving.json behind (run() writes it)."""
+    rows = (run(rate=40.0, duration=0.5, slots=4, fixed_batch=2)
+            if quick else run())
+    out = []
+    for policy, m in rows.items():
+        out.append(
+            f"serving/{policy},{m['mean_ttft_ms'] * 1e3:.1f},"
+            f"tok_per_s={m['tok_per_s']:.1f} served={m['served']}"
+            + (f" host_bubble={m['host_bubble_frac']:.3f}"
+               if "host_bubble_frac" in m else ""))
+    return out
 
 
 if __name__ == "__main__":

@@ -31,6 +31,8 @@ from repro.models.config import ATTN
 from repro.serverless.traces import TraceSpec, make_workload
 from repro.serving import ContinuousRuntime, ServingConfig, replay_trace
 
+from benchmarks.common import record_bench
+
 ARCHS = ("mamba2_780m", "recurrentgemma_9b")
 
 
@@ -98,6 +100,14 @@ def run_arch(arch: str, quick: bool) -> None:
     measured = sum(leaf.nbytes for leaf in jax.tree_util.tree_leaves(ext))
     assert measured == sb, (measured, sb)
     print("OK: all served, pool drained, compile-once, accounting matches")
+    record_bench(f"bench_hybrid_serving/{arch}", {
+        "served": len(served),
+        "mean_ttft_ms": res.mean_ttft * 1e3,
+        "mean_tpot_ms": res.mean_tpot * 1e3,
+        "state_bytes_per_slot": sb,
+        "kv_bytes_per_slot_cap": kb,
+        "metrics": rt.metrics_snapshot(),
+    })
 
 
 def main() -> None:

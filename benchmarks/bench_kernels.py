@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_row
+from benchmarks.common import csv_row, record_bench
 from repro.kernels.flash_attention.ref import flash_ref
 from repro.kernels.sgmv.ops import sgmv_apply
 from repro.kernels.sgmv.ref import sgmv_ref
@@ -71,6 +71,7 @@ def run():
     rows.append(csv_row("kernels/decode_attn_ref", t_dec * 1e6,
                         f"gflops={dflops / t_dec / 1e9:.2f} "
                         f"kernel_max_err={err:.2e}"))
+    record_bench("bench_kernels", {"rows": rows})
     return rows
 
 

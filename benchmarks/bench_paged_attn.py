@@ -39,6 +39,8 @@ from repro.models import transformer as tf
 from repro.serverless.traces import TraceSpec, make_workload
 from repro.serving import ContinuousRuntime, ServingConfig, replay_trace
 
+from benchmarks.common import record_bench
+
 
 @dataclasses.dataclass(frozen=True)
 class Shape:
@@ -234,7 +236,12 @@ def run(iters: int = 30, repeats: int = 5, rate: float = 4.0,
               f"{m['decode_chunk_ms']:7.2f} ms, compiles={m['compiles']}")
     print("\nsliding-window trace round-tripped with paged serving "
           "(window masked in-kernel; decode compiled once)")
-    return {"ops": rows, "e2e": e2e, "swa": swa}
+    out = {"ops": rows, "e2e": e2e, "swa": swa}
+    # Shape dataclasses -> labels for the JSON record
+    rec = {"ops": [{**r, "shape": r["shape"].label} for r in rows],
+           "e2e": e2e, "swa": swa}
+    print(f"metrics snapshot -> {record_bench('bench_paged_attn', rec)}")
+    return out
 
 
 if __name__ == "__main__":

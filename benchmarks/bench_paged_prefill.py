@@ -54,6 +54,8 @@ from repro.serverless.batching import Request
 from repro.serverless.traces import TraceSpec, make_workload
 from repro.serving import ContinuousRuntime, ServingConfig, replay_trace
 
+from benchmarks.common import record_bench
+
 BLOCK = 8
 
 
@@ -275,7 +277,9 @@ def run(repeats: int = 5, rate: float = 6.0, duration: float = 3.0,
     print(f"chunked prefill: 1 compile for lengths {min(lengths)}.."
           f"{lp['prompt_len']} (legacy: {m['legacy_compiles']} — one per "
           f"bucket, all paid at cold-start warmup)")
-    return {"ttft": m, "shared": s, "long": lp}
+    out = {"ttft": m, "shared": s, "long": lp}
+    print(f"metrics snapshot -> {record_bench('bench_paged_prefill', out)}")
+    return out
 
 
 if __name__ == "__main__":

@@ -31,6 +31,8 @@ from repro.models import transformer as tf
 from repro.serverless.traces import TraceSpec, make_workload
 from repro.serving import ContinuousRuntime, ServingConfig, replay_trace
 
+from benchmarks.common import record_bench
+
 SYS_PROMPT_TOKENS = 16          # two full blocks at block_size=8
 PROMPT_LEN = 24                 # system prompt + 8-token unique user tail
 OUTPUT_LEN = 16
@@ -133,7 +135,9 @@ def run(rate: float = 6.0, duration: float = 3.0, seed: int = 21,
     print(f"-> peak live blocks {wbase['high_water']} -> "
           f"{wboth['high_water']} "
           f"({wboth['reclaimed_blocks']} blocks returned mid-flight)")
-    return {"base": base, "shared": shared, "wbase": wbase, "wboth": wboth}
+    out = {"base": base, "shared": shared, "wbase": wbase, "wboth": wboth}
+    print(f"metrics snapshot -> {record_bench('bench_prefix_sharing', out)}")
+    return out
 
 
 if __name__ == "__main__":

@@ -1,10 +1,18 @@
 """Shared benchmark scaffolding: the paper's evaluation setup (§6.1) mapped
 onto the simulator — 4 Llama2-7B LoRA functions + 4 Llama2-13B LoRA
 functions, Azure-like traces in three CoV patterns, TPU-slice cluster.
+
+Also owns the ``BENCH_serving.json`` writer: every serving benchmark
+records its headline numbers (plus the runtime's full metrics snapshot)
+under its own key in ``results/BENCH_serving.json``, merging with what
+other benches already wrote — one file, one perf trajectory per commit
+(CI uploads it as an artifact).
 """
 from __future__ import annotations
 
 import copy
+import json
+import os
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -62,3 +70,36 @@ def run_policy(policy, workload: List[Dict],
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+# --------------------------------------------------------- BENCH_serving
+def bench_json_path() -> str:
+    """``results/BENCH_serving.json`` next to the repo's benchmarks.csv."""
+    out = os.path.join(os.path.dirname(__file__), "..", "results")
+    os.makedirs(out, exist_ok=True)
+    return os.path.join(out, "BENCH_serving.json")
+
+
+def record_bench(name: str, payload: Dict, path: Optional[str] = None
+                 ) -> str:
+    """Merge ``payload`` under ``benches[name]`` in BENCH_serving.json.
+
+    Read-modify-write so independently-run benchmarks accumulate into one
+    snapshot file; a corrupt/legacy file is replaced, not appended to.
+    Returns the path written."""
+    path = path or bench_json_path()
+    doc: Dict = {"schema": 1, "benches": {}}
+    try:
+        with open(path) as f:
+            prev = json.load(f)
+        if isinstance(prev, dict) and isinstance(prev.get("benches"), dict):
+            doc = prev
+    except (OSError, ValueError):
+        pass
+    doc["benches"][name] = payload
+    # serialize BEFORE opening: a non-JSON-able payload must raise without
+    # truncating the accumulated file mid-dump
+    text = json.dumps(doc, indent=2, sort_keys=True)
+    with open(path, "w") as f:
+        f.write(text + "\n")
+    return path

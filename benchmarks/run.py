@@ -20,10 +20,11 @@ def main() -> None:
     args = ap.parse_args()
     dur = 600.0 if args.quick else 1800.0
 
-    from benchmarks import (bench_kernels, fig6_ttft, fig7_tpot,
-                            fig8_breakdown, fig11_scalability, fig12_slo,
-                            sec69_overhead, table1_cost_effectiveness,
-                            table2_throughput, table3_ablation)
+    from benchmarks import (bench_continuous, bench_kernels, fig6_ttft,
+                            fig7_tpot, fig8_breakdown, fig11_scalability,
+                            fig12_slo, sec69_overhead,
+                            table1_cost_effectiveness, table2_throughput,
+                            table3_ablation)
 
     suites = [
         ("fig6_ttft", lambda: fig6_ttft.run(dur)),
@@ -37,6 +38,10 @@ def main() -> None:
         ("fig12_slo", lambda: fig12_slo.run(dur)),
         ("sec69_overhead", sec69_overhead.run),
         ("kernels", bench_kernels.run),
+        # real-engine serving comparison; also writes the serving metrics
+        # snapshot (host-bubble fraction, TTFT/TPOT percentiles, pool
+        # gauges) to results/BENCH_serving.json
+        ("serving_continuous", lambda: bench_continuous.run_csv(args.quick)),
     ]
 
     all_rows = ["name,us_per_call,derived"]

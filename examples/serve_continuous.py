@@ -17,7 +17,8 @@ import numpy as np
 from repro.configs import get_smoke
 from repro.models import transformer as tf
 from repro.serverless.traces import TraceSpec, make_workload
-from repro.serving import ContinuousRuntime, ServingConfig, replay_trace
+from repro.serving import (ContinuousRuntime, ServingConfig, Telemetry,
+                           replay_trace, write_metrics_json)
 
 
 def main():
@@ -41,6 +42,16 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=16,
                     help="per-function system-prompt tokens shared by "
                          "every request (0 = unique random prompts)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON timeline of "
+                         "the replay (open at https://ui.perfetto.dev): "
+                         "one track per decode slot, a queue track, a "
+                         "host dispatch track, and a wall-clock host-"
+                         "plan/device-execute track")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the runtime metrics snapshot as JSON "
+                         "(counters, pool/slot gauges, TTFT/TPOT "
+                         "percentiles, host-bubble fraction)")
     args = ap.parse_args()
     if args.shared_prefix >= args.prompt_len:
         raise SystemExit("--shared-prefix must be < --prompt-len")
@@ -80,8 +91,10 @@ def main():
                           w["prompt_len"] - args.shared_prefix,
                           dtype=np.int32)]) for w in wl}
 
+    tele = Telemetry() if args.trace_out else None
     res, events = replay_trace(rt, wl, fn_adapter, seed=args.seed,
-                               collect_events=True, prompts=prompts)
+                               collect_events=True, prompts=prompts,
+                               telemetry=tele)
 
     print(f"\nfirst {args.events} runtime events "
           f"(virtual clock — measured device time):")
@@ -128,6 +141,25 @@ def main():
     print(f"decode compiles after warmup: {rt.decode_compiles()}, "
           f"prefill compiles: {rt.prefill_compiles()} "
           f"(fixed shapes -> exactly 1 each)")
+    snap = rt.metrics_snapshot()
+    h = snap["histograms"]
+    print(f"host-bubble fraction: {snap['host_bubble_fraction']:.3f} "
+          f"over {snap['dispatches']} dispatches "
+          f"(device idle while the host plans)")
+    if "ttft_s" in h and "tpot_s" in h:      # empty on a zero-serve trace
+        print(f"TTFT p50/p95/p99: {h['ttft_s']['p50'] * 1e3:.1f}/"
+              f"{h['ttft_s']['p95'] * 1e3:.1f}/"
+              f"{h['ttft_s']['p99'] * 1e3:.1f} ms   "
+              f"TPOT p50/p99: {h['tpot_s']['p50'] * 1e3:.2f}/"
+              f"{h['tpot_s']['p99'] * 1e3:.2f} ms")
+    if args.metrics_out:
+        write_metrics_json(snap, args.metrics_out)
+        print(f"metrics snapshot -> {args.metrics_out}")
+    if tele is not None:
+        tele.write_chrome_trace(args.trace_out)
+        print(f"chrome trace -> {args.trace_out} "
+              f"({len(tele.spans)} spans, {len(tele.instants)} events; "
+              f"open at https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -17,14 +17,25 @@ Layout:
                    "Hybrid slot state").
   * ``replay``   — feeds ``serverless.traces`` arrival streams through the
                    runtime and emits simulator-compatible Request records.
+  * ``metrics``  — typed metrics registry (counters / gauges / p50-p99
+                   histograms); ``runtime.stats`` is a live view over its
+                   counters, ``runtime.metrics_snapshot()`` the flat JSON
+                   export (``BENCH_serving.json``).
+  * ``telemetry``— request-lifecycle span recorder on the replay virtual
+                   clock + dispatch wall windows; exports a Chrome-trace/
+                   Perfetto timeline and the host-bubble fraction
+                   (docs/observability.md).
 """
 from repro.serving.kv_pool import BlockPool, blocks_for_tokens
+from repro.serving.metrics import MetricsRegistry
 from repro.serving.prefix import PrefixCache
 from repro.serving.runtime import ContinuousRuntime, ServingConfig
 from repro.serving.replay import replay_trace
 from repro.serving.slots import AdmissionScheduler, SlotTable
+from repro.serving.telemetry import Telemetry, write_metrics_json
 
 __all__ = [
-    "AdmissionScheduler", "BlockPool", "ContinuousRuntime", "PrefixCache",
-    "ServingConfig", "SlotTable", "blocks_for_tokens", "replay_trace",
+    "AdmissionScheduler", "BlockPool", "ContinuousRuntime",
+    "MetricsRegistry", "PrefixCache", "ServingConfig", "SlotTable",
+    "Telemetry", "blocks_for_tokens", "replay_trace", "write_metrics_json",
 ]

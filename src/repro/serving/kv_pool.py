@@ -80,6 +80,12 @@ class BlockPool:
         return len(self._ref)
 
     @property
+    def num_free(self) -> int:
+        """Free-list blocks only (``available`` minus evictable cached
+        blocks) — the pool-occupancy gauge the metrics registry samples."""
+        return len(self._free)
+
+    @property
     def num_cached(self) -> int:
         return len(self._cached)
 

@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.serverless.batching import Request
 from repro.serverless.simulator import SimResult
+from repro.serving import telemetry as tm
 from repro.serving.runtime import ContinuousRuntime
 from repro.serving.slots import AdmissionScheduler, SlotState
 
@@ -45,7 +46,8 @@ def replay_trace(runtime: ContinuousRuntime, workload: Sequence[Dict],
                  prefill_group: Optional[int] = None,
                  slo_abandon: bool = True,
                  collect_events: bool = False,
-                 prompts: Optional[Dict[int, np.ndarray]] = None
+                 prompts: Optional[Dict[int, np.ndarray]] = None,
+                 telemetry: Optional[tm.Telemetry] = None
                  ) -> Tuple[SimResult, List[ReplayEvent]]:
     """Feed a ``serverless.traces.make_workload`` stream through the real
     engine.  ``fn_adapter`` maps fn_id -> adapter index in the stacked bank.
@@ -53,6 +55,16 @@ def replay_trace(runtime: ContinuousRuntime, workload: Sequence[Dict],
     ``prompts`` maps req_id -> token array; by default deterministic random
     prompts are synthesized from the trace lengths (pass real prompts to
     exercise cross-request prefix sharing — e.g. a common system prompt).
+
+    ``telemetry`` attaches a span recorder: request-lifecycle spans
+    (queued / prefill / decode, finish / abandon / reject / abort / stall)
+    are stamped on the virtual clock, dispatch wall windows flow in from
+    the runtime, and ``telemetry.chrome_trace()`` afterwards yields a
+    Perfetto-loadable timeline.  Recording never changes replay results —
+    the runtime takes identical timer readings either way (asserted
+    bitwise in tests/test_telemetry.py).  TTFT / TPOT / queue-wait
+    histograms always land in ``runtime.metrics`` (registry metrics are
+    not gated on the recorder).
 
     Returns (SimResult, events).  Request records: ``dispatch`` = admission,
     ``first_token`` = prefill completion (or -1 if abandoned/rejected),
@@ -65,6 +77,9 @@ def replay_trace(runtime: ContinuousRuntime, workload: Sequence[Dict],
     scfg = runtime.scfg
     group = prefill_group or 2   # admission group: fill-or-expire batching
     #   granularity (prefill itself is per-request chunk loops)
+    if telemetry is not None:
+        runtime.telemetry = telemetry
+    tel = runtime.telemetry
     timings = runtime.warmup()
     sched = AdmissionScheduler(group=group, slo_abandon=slo_abandon)
     # Eq. 2 profile from the measured chunked-prefill step: grouped items
@@ -108,6 +123,10 @@ def replay_trace(runtime: ContinuousRuntime, workload: Sequence[Dict],
         st.req.done = t_done
         live.pop(st.sid, None)
         held = sum(1 for b in st.blocks if b >= 0)
+        if tel is not None:
+            tel.instant(tm.EVT_FINISH,
+                        f"slot{st.sid}" if st.sid >= 0 else tm.TRACK_QUEUE,
+                        t_done, req_id=st.req.req_id, tokens=st.produced)
         log("finish", st.req.req_id, st.sid,
             f"{st.produced} tokens, {held} blocks released"
             + (f", {st.reclaimed} reclaimed mid-flight"
@@ -118,6 +137,9 @@ def replay_trace(runtime: ContinuousRuntime, workload: Sequence[Dict],
             sched.push(arrivals[ai])
             ai += 1
         for r in sched.abandon_expired(now):
+            if tel is not None:
+                tel.instant(tm.EVT_ABANDON, tm.TRACK_QUEUE, now,
+                            req_id=r.req_id, waited_s=now - r.arrival)
             log("abandon", r.req_id, detail=f"slo {r.slo_ttft}s lapsed")
 
         # admission: fill-or-expire groups, deadline-margin priority.
@@ -141,6 +163,10 @@ def replay_trace(runtime: ContinuousRuntime, workload: Sequence[Dict],
                     # graceful rejection: counted + reported failed, the
                     # rest of the batch (and the trace) keeps going
                     runtime.reject_too_long(r)
+                    if tel is not None:
+                        tel.instant(tm.EVT_REJECT, tm.TRACK_QUEUE, now,
+                                    req_id=r.req_id,
+                                    prompt_len=r.prompt_len)
                     log("reject", r.req_id,
                         detail=f"prompt {r.prompt_len} + output "
                                f"{r.output_len} exceeds slot KV capacity")
@@ -166,6 +192,9 @@ def replay_trace(runtime: ContinuousRuntime, workload: Sequence[Dict],
                 break
             t_disp = now
             now += res.dt
+            if tel is not None:
+                tel.span("dispatch:prefill", tm.TRACK_HOST, t_disp, now,
+                         requests=len(batch))
             for i, r in enumerate(batch):
                 r.dispatch = max(t_disp, r.arrival)   # clamp fp jitter from
                 r.first_token = now                   # the arrival-jump slack
@@ -173,6 +202,17 @@ def replay_trace(runtime: ContinuousRuntime, workload: Sequence[Dict],
                 r.breakdown["prefill"] = res.dt
                 token_times[r.req_id] = [now]
                 shared = res.shared_blocks[i] if res.shared_blocks else 0
+                if tel is not None:
+                    # the queued span ends exactly where prefill starts and
+                    # prefill ends at first_token, so TTFT (first_token -
+                    # arrival) is reconstructible from the spans alone
+                    track = (f"slot{res.slot_ids[i]}"
+                             if res.slot_ids[i] >= 0 else tm.TRACK_QUEUE)
+                    tel.span(tm.SPAN_QUEUED, tm.TRACK_QUEUE, r.arrival,
+                             r.dispatch, req_id=r.req_id)
+                    tel.span(tm.SPAN_PREFILL, track, r.dispatch, now,
+                             req_id=r.req_id, prompt_len=r.prompt_len,
+                             shared_blocks=shared)
                 log("admit", r.req_id, res.slot_ids[i],
                     f"adapter {fn_adapter[r.fn_id]}, "
                     f"prompt {r.prompt_len}"
@@ -202,12 +242,18 @@ def replay_trace(runtime: ContinuousRuntime, workload: Sequence[Dict],
             continue
         chunk_t0 = now
         now += dres.dt
+        if tel is not None:
+            tel.span("dispatch:decode", tm.TRACK_HOST, chunk_t0, now,
+                     rows=len(dres.emitted))
         finishing = {st.sid for st in dres.finished}
         for sid, toks in dres.emitted.items():
             st = runtime.slots.states[sid]
             req = st.req if st is not None else live.get(sid)
             if req is None or not toks:
                 continue
+            if tel is not None:
+                tel.span(tm.SPAN_DECODE, f"slot{sid}", chunk_t0, now,
+                         req_id=req.req_id, tokens=len(toks))
             if sid in finishing:
                 # the chunk was (possibly) clipped by budget/EOS, but the
                 # device still ran the full chunk: the last accepted token
@@ -226,6 +272,9 @@ def replay_trace(runtime: ContinuousRuntime, workload: Sequence[Dict],
             if st is not None:
                 st.req.breakdown["stalled_chunks"] = \
                     st.req.breakdown.get("stalled_chunks", 0.0) + 1.0
+                if tel is not None:
+                    tel.instant(tm.EVT_STALL, f"slot{sid}", now,
+                                req_id=st.req.req_id)
                 log("stall", st.req.req_id, sid, "pool exhausted")
         for st in dres.finished:
             tt = token_times.get(st.req.req_id, [now])
@@ -233,10 +282,31 @@ def replay_trace(runtime: ContinuousRuntime, workload: Sequence[Dict],
         for st in dres.aborted:
             st.req.done = now
             live.pop(st.sid, None)
+            if tel is not None:
+                tel.instant(tm.EVT_ABORT, f"slot{st.sid}", now,
+                            req_id=st.req.req_id)
             log("abort", st.req.req_id, st.sid, "evicted: pool exhausted")
 
     for r in requests:
         if r.first_token >= 0 and r.done >= 0:
             r.breakdown.setdefault(
                 "decode", max(r.done - r.first_token, 0.0))
+    # latency histograms — computed from the final Request records so the
+    # percentiles agree EXACTLY with SimResult.mean_ttft/mean_tpot math
+    m = runtime.metrics
+    for r in requests:
+        if r.first_token < 0:
+            continue
+        m.histogram("ttft_s", "first_token - arrival").observe(
+            r.first_token - r.arrival)
+        m.histogram("queue_wait_s", "dispatch - arrival").observe(
+            r.dispatch - r.arrival)
+        if r.done >= 0:
+            m.histogram("e2e_s", "done - arrival").observe(
+                r.done - r.arrival)
+            if r.output_len > 1:
+                m.histogram(
+                    "tpot_s", "(done - first_token) / (output_len - 1)"
+                ).observe((r.done - r.first_token)
+                          / max(r.output_len - 1, 1))
     return SimResult("continuous-real", requests, 0.0, 0.0), events

@@ -76,12 +76,22 @@ stall-and-resume a no-op.  State rows are per-request and never shared:
 a row is mutated by every decode step, and its value at position t
 depends on the entire prefix, so (unlike immutable per-position KV
 blocks) there is nothing safely shareable.
+
+Observability: every runtime owns a ``serving.metrics.MetricsRegistry``
+(``self.metrics``; ``self.stats`` is the legacy int-dict view over its
+counters), samples occupancy gauges at each scheduling boundary, records
+the wall window of every device dispatch for the host-bubble fraction,
+and — when a ``serving.telemetry.Telemetry`` recorder is attached —
+forwards per-dispatch wall records for the Chrome-trace export.  All
+measurement uses an injectable ``timer`` and the SAME timer-call sequence
+whether or not a recorder is attached, so telemetry can never perturb
+replay results (see docs/observability.md).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -93,8 +103,10 @@ from repro.models.cache import (GARBAGE_BLOCK, has_slot_state,
 from repro.models.config import ATTN, ModelConfig
 from repro.serverless.batching import Request
 from repro.serving.kv_pool import BlockPool, blocks_for_tokens
+from repro.serving.metrics import MetricsRegistry
 from repro.serving.prefix import PrefixCache
 from repro.serving.slots import SlotState, SlotTable
+from repro.serving.telemetry import Telemetry, host_bubble_fraction
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,7 +159,16 @@ class DecodeResult:
 
 
 class ContinuousRuntime:
-    def __init__(self, cfg: ModelConfig, params, scfg: ServingConfig):
+    def __init__(self, cfg: ModelConfig, params, scfg: ServingConfig, *,
+                 telemetry: Optional[Telemetry] = None,
+                 timer: Callable[[], float] = time.perf_counter):
+        """``telemetry`` attaches an optional span recorder (dispatch wall
+        windows flow into it; ``replay_trace`` stamps lifecycle spans).
+        ``timer`` is the wall clock used for EVERY latency measurement —
+        injectable so tests can replay under a deterministic fake clock
+        and assert bitwise-identical results with telemetry on vs off.
+        The runtime takes the same timer readings whether or not a
+        recorder is attached, so attaching one never perturbs timings."""
         reason = paging_unsupported_reason(cfg)
         if reason is not None:
             raise ValueError(reason)
@@ -189,20 +210,36 @@ class ContinuousRuntime:
             # prefix index maps them; eviction drops the mapping
             self.pool.cache_hook = self.prefix.has_block
             self.pool.evict_hook = self.prefix.forget_block
-        self.stats: Dict[str, int] = {
-            "prompt_tokens": 0,      # tokens in admitted prompts
-            "prefill_tokens": 0,     # prompt tokens newly written into the
-            #   pool (prompt_tokens minus prefix-shared coverage)
-            "recomputed_tokens": 0,  # prompt tokens actually run through
-            #   prefill compute (the bucketed path recomputed ALL of
-            #   prompt_tokens; chunked prefill skips covered tokens)
-            "shared_tokens": 0,      # prompt tokens covered by shared blocks
-            "shared_block_maps": 0,  # table entries mapped via sharing
-            "prefill_chunks": 0,     # chunked-prefill dispatches
-            "rejected_too_long": 0,  # requests dropped: prompt + output
-            #   exceed slot KV capacity (graceful, never a raise mid-trace)
-            "reclaimed_blocks": 0,   # blocks returned mid-flight (window)
-        }
+        self.telemetry = telemetry
+        self._timer = timer
+        # typed metrics registry; ``stats`` is the legacy int-dict
+        # interface over the SAME counter objects (serving.metrics) — old
+        # ``rt.stats["x"]`` callers and new snapshot consumers see one
+        # state.  Units: _tokens/_blocks are counts, _s is seconds.
+        self.metrics = MetricsRegistry()
+        for name, help_ in (
+            ("prompt_tokens", "tokens in admitted prompts"),
+            ("prefill_tokens", "prompt tokens newly written into the pool "
+             "(prompt_tokens minus prefix-shared coverage)"),
+            ("recomputed_tokens", "prompt tokens actually run through "
+             "prefill compute (the bucketed path recomputed ALL of "
+             "prompt_tokens; chunked prefill skips covered tokens)"),
+            ("shared_tokens", "prompt tokens covered by shared blocks"),
+            ("shared_block_maps", "table entries mapped via sharing"),
+            ("prefill_chunks", "chunked-prefill dispatches"),
+            ("decode_chunks", "jitted decode-chunk dispatches"),
+            ("stall_steps", "slot-chunks discarded on pool exhaustion "
+             "(one per stalled slot per decode dispatch)"),
+            ("rejected_too_long", "requests dropped: prompt + output "
+             "exceed slot KV capacity (graceful, never a raise mid-trace)"),
+            ("reclaimed_blocks", "blocks returned mid-flight (window)"),
+        ):
+            self.metrics.counter(name, help_)
+        self.stats = self.metrics.counter_view()
+        # host-bubble accounting: wall windows of every post-warmup device
+        # dispatch (jitted call + result sync).  Always recorded — the
+        # bubble fraction is a metric, not a telemetry feature.
+        self._dispatch_windows: List[Tuple[float, float]] = []
 
         serve = make_serve_step(cfg)
         chunk_step = make_chunked_prefill_step(cfg)
@@ -466,19 +503,33 @@ class ContinuousRuntime:
         sids = [free[i] for i in range(len(kept))]
 
         bs = scfg.block_size
-        t0 = time.perf_counter()
         firsts: Dict[int, int] = {}
+        total_dt = 0.0
         for batch_idx in ([independent[j:j + scfg.prefill_rows]
                            for j in range(0, len(independent),
                                           scfg.prefill_rows)]
                           + [[i] for i in dependent]):
             if not batch_idx:
                 continue
+            # one dispatch window per prefill group: [w0, w1] brackets the
+            # group's whole chunk loop incl. the final logit sync (the
+            # per-round host array prep rides inside — the loop never
+            # releases the device between rounds, so the window is the
+            # honest device-busy bracket for host-bubble accounting)
+            w0 = self._timer()
             got = self._chunk_prefill(
                 [(kept[i][1], kept[i][2], plans[i][0] + plans[i][1],
                   len(plans[i][0]), sids[i]) for i in batch_idx])
+            w1 = self._timer()
+            total_dt += w1 - w0
+            self._dispatch_windows.append((w0, w1))
+            if self.telemetry is not None:
+                self.telemetry.record_dispatch("prefill", w0, w1,
+                                               rows=len(batch_idx))
+            self.metrics.histogram(
+                "prefill_dispatch_s",
+                "wall seconds per prefill group dispatch").observe(w1 - w0)
             firsts.update(zip(batch_idx, got))
-        total_dt = time.perf_counter() - t0
 
         slot_ids, first_tokens, finished = [], [], []
         for i, (req, prompt, adapter) in enumerate(kept):
@@ -511,6 +562,7 @@ class ContinuousRuntime:
             else:
                 slot_ids.append(sid)
                 self.slots.bind(st, first)
+        self._sample_gauges()
         return AdmitResult(slot_ids, first_tokens, finished, total_dt,
                            shared_blocks=[len(p[0]) for p in plans],
                            rejected=rejected)
@@ -553,7 +605,12 @@ class ContinuousRuntime:
         if self.slots.num_active == 0:
             return None
         scfg = self.scfg
+        t_plan0 = self._timer()
         stalled, aborted = self._ensure_blocks()
+        # a stall step = one slot riding one chunk with discarded outputs;
+        # ReplayEvent already logged these per-slot, the runtime never
+        # counted them (the ISSUE-6 counter-asymmetry satellite)
+        self.stats["stall_steps"] += len(stalled)
         if self.slots.num_active == 0:      # everything aborted
             return DecodeResult({}, [], aborted, stalled, 0.0)
 
@@ -565,14 +622,24 @@ class ContinuousRuntime:
         # REC/SSD state row is redirected to the garbage state row
         # (slots.state_rows) so the recurrence cannot advance twice — so
         # discarding the outputs and not advancing pos is a true no-op.
-        t0 = time.perf_counter()
+        t0 = self._timer()
         toks, self.cache = self._decode(
             self.params, jnp.asarray(self.slots.tokens), self.cache,
             jnp.asarray(self.slots.pos), jnp.asarray(self.slots.block_tbl),
             jnp.asarray(self.slots.adapter),
             jnp.asarray(self.slots.state_rows(self.garbage_state_row)))
         toks = np.asarray(toks)                            # (B, K), sync
-        dt = time.perf_counter() - t0
+        t1 = self._timer()
+        dt = t1 - t0
+        self.stats["decode_chunks"] += 1
+        self._dispatch_windows.append((t0, t1))
+        if self.telemetry is not None:
+            self.telemetry.record_dispatch(
+                "decode", t0, t1, host_plan_s=t0 - t_plan0,
+                rows=self.slots.num_active)
+        self.metrics.histogram(
+            "decode_dispatch_s",
+            "wall seconds per jitted decode-chunk dispatch").observe(dt)
 
         emitted: Dict[int, List[int]] = {}
         finished: List[SlotState] = []
@@ -598,6 +665,7 @@ class ContinuousRuntime:
                 self.slots.pos[s.sid] = s.pos
                 self.slots.tokens[s.sid] = s.last_token
                 self._reclaim_window(s)
+        self._sample_gauges()
         return DecodeResult(emitted, finished, aborted, stalled, dt)
 
     def _reclaim_window(self, s: SlotState) -> None:
@@ -626,7 +694,13 @@ class ContinuousRuntime:
         """Compile the two fixed shapes — ONE chunked-prefill step (for
         every prompt length) and the decode chunk — and measure
         steady-state latencies.  Leaves pool and slots untouched (warmup
-        traffic only ever writes the garbage block)."""
+        traffic only ever writes the garbage block).
+
+        The timings also land in the metrics registry as
+        ``warmup_prefill_chunk_s`` / ``warmup_decode_chunk_s`` gauges, so
+        every metrics snapshot carries the Eq. 2 profile the admission
+        scheduler was seeded with, instead of the dict being dropped
+        after ``replay_trace`` wires the scheduler."""
         scfg, timings = self.scfg, {}
         C, G = scfg.prefill_chunk, scfg.prefill_rows
         ids = jnp.full((G, C // scfg.block_size), GARBAGE_BLOCK, jnp.int32)
@@ -637,22 +711,77 @@ class ContinuousRuntime:
         g_pre = jnp.full((G,), self.garbage_state_row, jnp.int32)
         g_dec = jnp.full((scfg.num_slots,), self.garbage_state_row, jnp.int32)
         for rep in range(2):
-            t0 = time.perf_counter()
+            t0 = self._timer()
             lg, self.cache = self._prefill(
                 self.params, jnp.zeros((G, C), jnp.int32), zeros, zeros,
                 zeros, self.cache, ids, tbl, g_pre)
             np.asarray(lg)
-            timings["prefill_chunk_s"] = time.perf_counter() - t0
+            timings["prefill_chunk_s"] = self._timer() - t0
         for rep in range(2):
-            t0 = time.perf_counter()
+            t0 = self._timer()
             toks, self.cache = self._decode(
                 self.params, jnp.asarray(self.slots.tokens), self.cache,
                 jnp.asarray(self.slots.pos),
                 jnp.asarray(self.slots.block_tbl),
                 jnp.asarray(self.slots.adapter), g_dec)
             np.asarray(toks)
-            timings["decode_chunk_s"] = time.perf_counter() - t0
+            timings["decode_chunk_s"] = self._timer() - t0
+        for key, val in timings.items():
+            self.metrics.gauge(
+                f"warmup_{key}", "steady-state step latency measured at "
+                "warmup (the admission scheduler's Eq. 2 seed)").set(val)
         return timings
+
+    def _sample_gauges(self) -> None:
+        """Sample the occupancy gauges at a scheduling boundary (end of
+        every admit / decode chunk).  Pure host-side reads — no device
+        sync, no timer calls, so sampling can never perturb timings."""
+        g = self.metrics.gauge
+        g("pool_free_blocks", "free-list blocks").set(self.pool.num_free)
+        g("pool_live_blocks",
+          "live blocks (refcount >= 1)").set(self.pool.in_use)
+        g("pool_cached_blocks",
+          "refcount-0 blocks parked for prefix reuse").set(
+            self.pool.num_cached)
+        g("pool_high_water_blocks",
+          "peak live-block count").set(self.pool.high_water)
+        g("slots_active", "bound decode slots").set(self.slots.num_active)
+        g("slot_utilization_frac", "active / num_slots").set(
+            self.slots.num_active / max(self.scfg.num_slots, 1))
+        if self.prefix is not None:
+            g("prefix_trie_blocks",
+              "physical blocks indexed by the prefix trie").set(
+                len(self.prefix))
+
+    def host_bubble_fraction(self) -> float:
+        """Share of the wall interval between the first and last device
+        dispatch NOT covered by device work — host planning the device
+        waits on (the metric the ROADMAP async-overlap item is gated on).
+        0.0 until two dispatches exist; always in [0, 1]."""
+        return host_bubble_fraction(self._dispatch_windows)
+
+    def metrics_snapshot(self) -> Dict[str, Any]:
+        """One flat JSON-able dict of everything the runtime knows:
+        counters (the legacy ``stats`` keys plus the new mirrors), gauge
+        summaries, latency histograms, compile-count mirrors, and the
+        host-bubble fraction.  Exporters (``--metrics-out``,
+        ``BENCH_serving.json``) call this once after a replay."""
+        self._sample_gauges()
+        self.metrics.gauge(
+            "decode_compiles", "decode-step compile count (must be 1; -1 "
+            "when the jit cache probe is unavailable)").set(
+            self.decode_compiles())
+        self.metrics.gauge(
+            "prefill_compiles", "chunked-prefill compile count (must be "
+            "1; -1 when the probe is unavailable)").set(
+            self.prefill_compiles())
+        snap = self.metrics.snapshot()
+        snap["host_bubble_fraction"] = self.host_bubble_fraction()
+        snap["dispatches"] = len(self._dispatch_windows)
+        if self.telemetry is not None:
+            snap["spans"] = len(self.telemetry.spans)
+            snap["instant_events"] = len(self.telemetry.instants)
+        return snap
 
     def decode_compiles(self) -> int:
         """Compile-count probe for the decode step (must be 1 after warmup;

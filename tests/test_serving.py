@@ -286,6 +286,11 @@ def test_replay_trace_end_to_end(small_model):
     assert rt.pool.in_use == 0, "KV blocks leaked"
     assert rt.decode_compiles() in (1, -1), "decode step re-jitted"
     assert rt.prefill_compiles() in (1, -1), "chunked prefill re-jitted"
+    # counter symmetry: decode dispatches are counted like prefill ones,
+    # and the stall counter exists even when the pool never ran dry
+    assert rt.stats["decode_chunks"] > 0
+    assert rt.stats["prefill_chunks"] > 0
+    assert rt.stats["stall_steps"] >= 0
     kinds = {e.kind for e in events}
     assert "admit" in kinds and "finish" in kinds
 
@@ -393,6 +398,8 @@ def test_stall_does_not_corrupt_output(small_model):
             for sid, toks in d.emitted.items():
                 out[sid].extend(toks)
         assert rt.pool.in_use == 0
+        assert rt.stats["stall_steps"] == stalls, \
+            "stall_steps counter disagrees with DecodeResult.stalled"
         return out, stalls
 
     # prompt 8 -> 3 blocks each at admit; budget 9 -> 4 blocks each.
