@@ -28,30 +28,63 @@ def _on_tpu() -> bool:
 
 
 def _paged_decode_jnp(q, kp, vp, block_tbl, pos, *,
-                      window: Optional[int] = None):
+                      window: Optional[int] = None,
+                      full_walk: bool = False):
     """Fused jnp block walk: same math as the kernel, blocked layout kept
-    throughout (the XLA analogue of the in-kernel walk)."""
+    throughout (the XLA analogue of the in-kernel walk).
+
+    Online-softmax ``fori_loop`` over logical blocks whose trip count is
+    the GROUP's max live block count — ``max(pos) // bs + 1``, a traced
+    scalar, so one compile covers every occupancy — instead of the full
+    table capacity MB (the kernel prunes in-grid on TPU; this is the
+    off-TPU analogue, same bound PR 5 gave the chunk-prefill walk).
+    Blocks past every row's position are fully masked and contribute
+    exact float identities (p masked to literal 0, corr = exp(0) = 1),
+    so the bounded walk is bitwise-identical to ``full_walk=True`` (all
+    MB blocks — kept for the regression test)."""
     B, H, hd = q.shape
     K, _, bs, _ = kp.shape
     G = H // K
     MB = block_tbl.shape[1]
-    phys = jnp.maximum(block_tbl, 0)
-    kb = kp[:, phys]                                 # (K, B, MB, bs, hd)
-    vb = vp[:, phys]
-    qg = q.reshape(B, K, G, hd)
-    s = jnp.einsum("bkgh,kbmsh->bkgms", qg.astype(jnp.float32),
-                   kb.astype(jnp.float32)) / math.sqrt(hd)
-    kpos = jnp.arange(MB)[:, None] * bs + jnp.arange(bs)[None, :]
-    ok = (kpos[None] <= pos[:, None, None]) & (block_tbl[:, :, None] >= 0)
-    if window is not None:
-        ok = ok & (kpos[None] > pos[:, None, None] - window)
-    s = jnp.where(ok[:, None, None], s, NEG_INF)
-    sf = s.reshape(B, K, G, MB * bs)
-    m = jnp.max(sf, axis=-1, keepdims=True)
-    p = jnp.exp(sf - m)
-    w = (p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
-         ).reshape(B, K, G, MB, bs)
-    o = jnp.einsum("bkgms,kbmsh->bkgh", w, vb.astype(jnp.float32))
+    qg = q.reshape(B, K, G, hd).astype(jnp.float32)
+    sm = 1.0 / math.sqrt(hd)
+    if full_walk:
+        nb_live = MB
+    else:
+        nb_live = jnp.minimum(jnp.max(pos) // bs + 1, MB)
+
+    def body(j, carry):
+        m, l, acc = carry
+        phys = jnp.maximum(block_tbl[:, j], 0)       # (B,)
+        kb = kp[:, phys]                             # (K, B, bs, hd)
+        vb = vp[:, phys]
+        s = jnp.einsum("bkgh,kbsh->bkgs", qg,
+                       kb.astype(jnp.float32)) * sm  # (B, K, G, bs)
+        kpos = j * bs + jnp.arange(bs)               # (bs,)
+        ok = (kpos[None] <= pos[:, None]) & \
+            (block_tbl[:, j] >= 0)[:, None]          # (B, bs)
+        if window is not None:
+            ok = ok & (kpos[None] > pos[:, None] - window)
+        s = jnp.where(ok[:, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # masked keys are EXACT zeros (not exp(-1e30 - m), which is only
+        # 0 once a real key raised m): an all-masked block is then a
+        # strict float identity (corr = exp(0) = 1, l += 0, acc += 0),
+        # which is what makes the bounded walk bitwise-equal to the
+        # full one
+        p = jnp.where(ok[:, None, None],
+                      jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgs,kbsh->bkgh", p, vb.astype(jnp.float32))
+        return m_new, l, acc
+
+    m0 = jnp.full((B, K, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G), jnp.float32)
+    acc0 = jnp.zeros((B, K, G, hd), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, nb_live, body, (m0, l0, acc0))
+    o = acc / jnp.maximum(l[..., None], 1e-30)
     return o.reshape(B, H, hd).astype(q.dtype)
 
 

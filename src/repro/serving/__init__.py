@@ -25,8 +25,14 @@ Layout:
                    clock + dispatch wall windows; exports a Chrome-trace/
                    Perfetto timeline and the host-bubble fraction
                    (docs/observability.md).
+  * ``compile_guard`` — ``CompileGuard`` context manager that fails
+                   tests/benches loudly on unexpected re-jits (the
+                   dynamic half of ``tools/reprolint``'s RL001;
+                   docs/static-analysis.md).
 """
 from repro.serving.kv_pool import BlockPool, blocks_for_tokens
+from repro.serving.compile_guard import (CompileBudgetExceeded,
+                                         CompileGuard)
 from repro.serving.metrics import MetricsRegistry
 from repro.serving.prefix import PrefixCache
 from repro.serving.runtime import ContinuousRuntime, ServingConfig
@@ -35,7 +41,8 @@ from repro.serving.slots import AdmissionScheduler, SlotTable
 from repro.serving.telemetry import Telemetry, write_metrics_json
 
 __all__ = [
-    "AdmissionScheduler", "BlockPool", "ContinuousRuntime",
-    "MetricsRegistry", "PrefixCache", "ServingConfig", "SlotTable",
-    "Telemetry", "blocks_for_tokens", "replay_trace", "write_metrics_json",
+    "AdmissionScheduler", "BlockPool", "CompileBudgetExceeded",
+    "CompileGuard", "ContinuousRuntime", "MetricsRegistry",
+    "PrefixCache", "ServingConfig", "SlotTable", "Telemetry",
+    "blocks_for_tokens", "replay_trace", "write_metrics_json",
 ]

@@ -1,0 +1,17 @@
+"""RL001 clean fixture: static-derivable casts in jit-reachable code.
+
+Shape-derived values, scalar-literal parameter defaults, and arithmetic
+over them are concrete Python numbers at trace time — casting them is
+legitimate (the expert-capacity pattern)."""
+import jax
+import jax.numpy as jnp
+
+
+def step(x, capacity_factor=1.25, k=2):
+    n, d = x.shape
+    cap = int(n * k * capacity_factor)     # static: shape + literals
+    top = min(cap, len(x.shape) * 8)
+    return x * jnp.float32(top) + float(d)
+
+
+run = jax.jit(step)

@@ -1,0 +1,17 @@
+"""RL001 tripping fixture: host materialization in jit-reachable code.
+
+Expected: three RL001 violations inside ``step`` (int() on a traced
+value, a numpy call, and ``.item()``)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def step(x, scale):
+    n = int(jnp.sum(x))            # trips: int() on a traced reduction
+    host = np.asarray(x)           # trips: numpy materializes on host
+    t = x.item()                   # trips: host sync + retrace
+    return x * scale + n + t + host.shape[0]
+
+
+run = jax.jit(step)

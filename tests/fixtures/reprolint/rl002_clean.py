@@ -1,0 +1,16 @@
+"""RL002 clean fixture: the one deliberate token-emission sync, marked.
+
+A serving step needs exactly one device->host transfer per emitted
+token batch; the allowlist marker names it as deliberate."""
+import jax
+import numpy as np
+
+
+class ContinuousRuntime:
+    def __init__(self):
+        self._decode = jax.jit(lambda x: x * 2)
+
+    def decode(self, x):
+        toks = self._decode(x)
+        toks = np.asarray(toks)  # reprolint: sync-point (token emission)
+        return toks

@@ -1,0 +1,27 @@
+"""RL002 tripping fixture: host syncs inside the plan region.
+
+The class/method names match the default ``plan-functions`` patterns.
+``try_admit`` reintroduces the per-item sync loop this repo's runtime
+retired (one device drain per admitted prompt); ``decode`` stalls via
+``.block_until_ready()`` and ``float()`` over a jitted dispatch.
+Expected: three RL002 violations, the first carrying the in-loop
+warning."""
+import jax
+import numpy as np
+
+
+class ContinuousRuntime:
+    def __init__(self):
+        self._decode = jax.jit(lambda x: x * 2)
+
+    def try_admit(self, logit_rounds):
+        firsts = []
+        for lg in logit_rounds:
+            host = np.asarray(lg)          # trips: sync inside a loop
+            firsts.append(int(host.argmax()))
+        return firsts
+
+    def decode(self, x):
+        toks = self._decode(x)
+        toks.block_until_ready()           # trips: host stall
+        return float(self._decode(x))      # trips: cast over dispatch

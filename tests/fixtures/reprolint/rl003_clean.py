@@ -1,0 +1,24 @@
+"""RL003 clean fixture: donated buffers rebound by the same statement.
+
+The donate-and-rebind idiom the serving runtime uses for its KV pool:
+the donated name is a target of the assignment that consumes it, so no
+stale buffer survives the call."""
+import jax
+
+
+def update(cache, tok):
+    return cache + tok, cache * 0
+
+
+step = jax.jit(update, donate_argnums=(0,))
+
+
+def drive(cache, toks):
+    out, cache = step(cache, toks)     # rebound: safe
+    return out + cache.sum()
+
+
+def drive_loop(cache, toks):
+    for t in toks:
+        cache, _ = step(cache, t)      # rebound every iteration: safe
+    return cache

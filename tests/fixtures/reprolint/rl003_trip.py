@@ -1,0 +1,25 @@
+"""RL003 tripping fixture: donated buffers read after the call.
+
+Expected: two RL003 violations — a later read of a donated name, and a
+donation inside a loop without rebinding (the next iteration reads a
+buffer XLA already reused)."""
+import jax
+
+
+def update(cache, tok):
+    return cache + tok
+
+
+step = jax.jit(update, donate_argnums=(0,))
+
+
+def drive(cache, toks):
+    out = step(cache, toks)
+    return out + cache.sum()       # trips: cache was donated above
+
+
+def drive_loop(cache, toks):
+    total = None
+    for t in toks:
+        total = step(cache, t)     # trips: donated every iteration
+    return total

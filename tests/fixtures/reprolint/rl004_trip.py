@@ -1,0 +1,38 @@
+"""RL004 tripping fixture: Pallas kernel rule violations.
+
+Expected: five RL004 violations — an index_map closing over a mutable
+module-level list, an index_map arity mismatch, an unmasked block-table
+walk in the kernel body, a lane-hostile block tile, and a VMEM working
+set over budget."""
+import jax
+from jax.experimental import pallas as pl
+
+_OFFSETS = [0, 1, 2]                   # mutable module state
+
+
+def _index_map_mutable(i, j):
+    return (_OFFSETS[0] + i, j)        # trips: mutable closure
+
+
+def _index_map_bad_arity(i):
+    return (i, 0)                      # trips: grid rank is 2
+
+
+def _kernel(tbl_ref, x_ref, o_ref):
+    # trips: block table consumed with no maximum/clip/>=0 guard
+    o_ref[...] = x_ref[...] + tbl_ref[0]
+
+
+def launch(x):
+    return pl.pallas_call(
+        _kernel,
+        grid=(4, 4),
+        in_specs=[
+            # trips: lane dim 200 (not <= 128, not a multiple of 128)
+            pl.BlockSpec((8, 200), _index_map_mutable),
+            # trips: 2048x2048 f32 double-buffered = 32 MiB > budget
+            pl.BlockSpec((2048, 2048), _index_map_bad_arity),
+        ],
+        out_specs=pl.BlockSpec((8, 128), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x, x)

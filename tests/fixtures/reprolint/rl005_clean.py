@@ -1,0 +1,11 @@
+"""RL005 clean fixture: explicit f32/bf16 dtypes end to end."""
+import jax
+import jax.numpy as jnp
+
+
+def project(x):
+    w = jnp.zeros((4, 4), dtype=jnp.float32)
+    return (x.astype(jnp.float32) @ w).astype(jnp.bfloat16)
+
+
+run = jax.jit(project)

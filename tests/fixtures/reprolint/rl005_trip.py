@@ -1,0 +1,16 @@
+"""RL005 tripping fixture: float64 drift in jit-reachable code.
+
+Expected: three RL005 violations — ``dtype="float64"``,
+``astype(float)`` (Python float IS float64), and an explicit
+``jnp.float64`` reference."""
+import jax
+import jax.numpy as jnp
+
+
+def project(x):
+    w = jnp.zeros((4, 4), dtype="float64")     # trips
+    y = x.astype(float)                        # trips
+    return (y @ w).astype(jnp.float64)         # trips
+
+
+run = jax.jit(project)

@@ -20,7 +20,8 @@ from repro.models.cache import (has_slot_state, init_paged_cache,
 from repro.models.config import REC, SSD
 from repro.serverless.batching import Request
 from repro.serverless.traces import TraceSpec, make_workload
-from repro.serving import ContinuousRuntime, ServingConfig, replay_trace
+from repro.serving import (CompileGuard, ContinuousRuntime, ServingConfig,
+                           replay_trace)
 
 NUM_SLOTS, BS, MB = 3, 8, 4
 
@@ -183,16 +184,17 @@ def test_hybrid_replay_trace_end_to_end(arch):
                            output_len=8, slo_ttft=30.0) for a in range(2)]
         wl = make_workload(specs, seed=11)
         assert len(wl) > 4
-        res, events = replay_trace(rt, wl, {f"fn{a}": a for a in range(2)},
-                                   slo_abandon=False, collect_events=True)
+        with CompileGuard({"decode": 1, "prefill": 1}, runtime=rt):
+            res, events = replay_trace(rt, wl,
+                                       {f"fn{a}": a for a in range(2)},
+                                       slo_abandon=False,
+                                       collect_events=True)
         served = [r for r in res.requests if r.first_token >= 0]
         assert len(served) == len(wl), (arch, use_kernel)
         for r in served:
             assert r.done >= r.first_token >= r.dispatch >= r.arrival
         assert rt.slots.num_active == 0, "slots leaked"
         assert rt.pool.in_use == 0, "KV blocks leaked"
-        assert rt.decode_compiles() in (1, -1), "decode re-jitted"
-        assert rt.prefill_compiles() in (1, -1), "prefill re-jitted"
         assert {e.kind for e in events} >= {"admit", "finish"}
 
 

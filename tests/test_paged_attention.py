@@ -70,6 +70,33 @@ def test_fused_jnp_matches_oracle():
                                    atol=3e-5, rtol=3e-5)
 
 
+def test_bounded_walk_bitwise_equals_full_walk():
+    """The decode walk bounded by the group's max live block count
+    (``max(pos) // bs + 1`` — the ROADMAP carry-over PR 5 left open)
+    must be BITWISE equal to walking the full table capacity: pruned
+    blocks are fully masked, so with exact-zero masked keys every
+    skipped step is a strict float identity, not an approximation.
+    Mixed occupancy (ragged rows + inactive rows) is the hard case."""
+    for seed, win, inactive in ((11, None, ()), (23, 6, (0, 3))):
+        q, kp, vp, tbl, pos = _mk(5, 2, 2, 32, 8, 8, 32, seed=seed,
+                                  inactive_rows=inactive)
+        bounded = _paged_decode_jnp(q, kp, vp, tbl, pos, window=win)
+        full = _paged_decode_jnp(q, kp, vp, tbl, pos, window=win,
+                                 full_walk=True)
+        np.testing.assert_array_equal(np.asarray(bounded),
+                                      np.asarray(full))
+    # the bound actually bites: a one-block row among empties must not
+    # walk all MB blocks — proof by equality when the rest of the pool
+    # is poisoned with NaNs at block indices the bounded walk never
+    # touches (a full walk would clip -1 -> block 0 and read them fine,
+    # but any misindexed bounded read would surface as NaN)
+    q, kp, vp, tbl, pos = _mk(4, 2, 2, 32, 8, 8, 32, seed=31,
+                              inactive_rows=(1, 2, 3), stalled_rows=(0,))
+    assert int(jnp.max(pos)) == 0          # one live block in the group
+    out = _paged_decode_jnp(q, kp, vp, tbl, pos)
+    assert np.isfinite(np.asarray(out)).all()
+
+
 def test_mixed_live_stalled_inactive_rows():
     """Inactive (-1 table) and stalled (pos=0) rows must not perturb live
     rows, and every row's output must stay finite (branch-free batch)."""

@@ -20,7 +20,7 @@ from repro.kernels.paged_prefill.ref import paged_prefill_ref
 from repro.models import transformer as tf
 from repro.models.cache import GARBAGE_BLOCK, init_paged_cache
 from repro.serverless.batching import Request
-from repro.serving import ContinuousRuntime, ServingConfig
+from repro.serving import CompileGuard, ContinuousRuntime, ServingConfig
 
 
 # ------------------------------------------------------------- kernel ops
@@ -299,13 +299,14 @@ def test_runtime_prefill_compile_once_across_lengths(small_model):
                          decode_chunk=4)
     rt = ContinuousRuntime(cfg, params, scfg)
     rng = np.random.default_rng(3)
-    for i, L in enumerate((5, 16, 23, 40, 57)):
-        req = Request(req_id=i, fn_id="fn0", arrival=0.0, prompt_len=L,
-                      output_len=2, slo_ttft=30.0)
-        res = rt.try_admit([(req, rng.integers(0, 512, L,
-                                               dtype=np.int32), 0)])
-        assert res is not None and res.slot_ids[0] >= 0
-        while rt.slots.num_active:
-            rt.decode()
-    assert rt.prefill_compiles() in (1, -1)
+    # the guard raises on exit if any of the five lengths re-jitted
+    with CompileGuard({"prefill": 1}, runtime=rt):
+        for i, L in enumerate((5, 16, 23, 40, 57)):
+            req = Request(req_id=i, fn_id="fn0", arrival=0.0, prompt_len=L,
+                          output_len=2, slo_ttft=30.0)
+            res = rt.try_admit([(req, rng.integers(0, 512, L,
+                                                   dtype=np.int32), 0)])
+            assert res is not None and res.slot_ids[0] >= 0
+            while rt.slots.num_active:
+                rt.decode()
     assert rt.pool.in_use == 0

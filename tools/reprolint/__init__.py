@@ -1,0 +1,63 @@
+"""reprolint — AST lint for this repo's hot-path serving invariants.
+
+The runtime's headline guarantees (decode/prefill compile exactly once,
+the host never syncs mid-plan, Pallas index maps stay scalar-prefetch
+pure) are load-bearing for TTFT/TPOT but live nowhere in the type
+system: a silent re-jit is a cold start by another name, and one stray
+``np.asarray`` in the scheduler serializes the whole decode loop.  Each
+rule is a small AST visitor with a stable ID:
+
+* **RL001 recompile hazard** — host materialization (``int()/float()/
+  bool()`` on traced values, ``.item()``, ``np.*``) inside functions
+  reachable from a ``jax.jit`` call graph.
+* **RL002 host sync in the plan region** — ``np.asarray`` /
+  ``.block_until_ready()`` / ``jax.device_get`` inside scheduling code
+  between dispatches; the two legitimate token-emission syncs carry a
+  ``# reprolint: sync-point`` marker.
+* **RL003 donation-after-use** — a buffer passed at a
+  ``donate_argnums`` position read again after the jitted call.
+* **RL004 Pallas kernel rules** — BlockSpec ``index_map`` purity and
+  arity, static VMEM footprint under budget, block-table consumers
+  masking ``-1`` entries.
+* **RL005 dtype drift** — float64 creeping into jitted code (explicit
+  ``float64`` references, ``astype(float)``, float-literal array
+  creation without a dtype).
+
+Run: ``python -m tools.reprolint src/ benchmarks/`` (exit 1 on any
+violation).  Per-line suppression: ``# reprolint: disable=RL001`` on
+the flagged line or the line above; ``[tool.reprolint]`` in
+pyproject.toml holds project config.  The dynamic complement is
+``repro.serving.compile_guard.CompileGuard`` (RL001's contract enforced
+at test time).  See docs/static-analysis.md for the full catalog.
+"""
+from tools.reprolint.config import Config, load_config
+from tools.reprolint.core import ProjectIndex, Violation, collect_files
+from tools.reprolint.rules import RULES
+
+
+def run_paths(paths, config=None, index_extra=None):
+    """Analyze ``paths`` and return the (sorted) surviving violations.
+
+    ``index_extra`` adds files to the project index (cross-module call
+    resolution) without reporting on them; by default the config's
+    ``index-paths`` (src/) are indexed so running on ``benchmarks/``
+    still sees the runtime's jit sites.
+    """
+    cfg = config or load_config()
+    report_files = collect_files(paths, exclude=cfg.exclude)
+    index_files = collect_files(
+        list(paths) + list(index_extra or []) + cfg.index_paths,
+        exclude=cfg.exclude)
+    index = ProjectIndex(index_files)
+    report_set = {f.rel for f in report_files}
+    out = []
+    for rule_id, rule_fn in RULES.items():
+        if not cfg.rule_enabled(rule_id):
+            continue
+        for v in rule_fn(index, cfg):
+            if v.path not in report_set:
+                continue
+            if index.suppressed(v):
+                continue
+            out.append(v)
+    return sorted(out, key=lambda v: (v.path, v.line, v.col, v.rule))

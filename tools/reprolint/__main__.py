@@ -1,0 +1,39 @@
+"""CLI: ``python -m tools.reprolint [paths ...]``.
+
+Exits 1 if any violation survives allowlist markers and config, 0
+otherwise.  Default paths: ``src benchmarks`` (the CI gate).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from tools.reprolint import load_config, run_paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="reprolint",
+        description="hot-path invariant checker (RL001-RL005)")
+    ap.add_argument("paths", nargs="*", default=["src", "benchmarks"],
+                    help="files or directories to lint "
+                         "(default: src benchmarks)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress the summary line")
+    args = ap.parse_args(argv)
+
+    cfg = load_config()
+    violations = run_paths(args.paths, config=cfg)
+    for v in violations:
+        print(v.render())
+    if not args.quiet:
+        enabled = [r for r in cfg.enable if cfg.rule_enabled(r)]
+        status = (f"reprolint: {len(violations)} violation(s) "
+                  f"[{', '.join(enabled)}] over "
+                  f"{' '.join(args.paths)}")
+        print(status, file=sys.stderr)
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

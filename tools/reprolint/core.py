@@ -1,0 +1,640 @@
+"""Core machinery for reprolint: files, scopes, call graph, jit sites.
+
+The analyzer is pure stdlib ``ast`` — it never imports the analyzed
+code, so it runs in CI without jax installed.  The pieces:
+
+* :class:`SourceFile` — parsed module + ``# reprolint:`` marker map.
+* :class:`Scope` / :class:`FuncInfo` / :class:`ClassInfo` — lexical
+  name binding (imports, assignments, params, nested defs) so rules can
+  resolve ``np.asarray`` through aliases and ``serve(...)`` through
+  ``serve = make_serve_step(cfg)`` factory bindings.
+* :class:`JitSite` — one ``jax.jit(...)`` call or decorator, with its
+  resolved target functions and literal ``donate_argnums``.
+* :class:`ProjectIndex` — ties it together and computes the set of
+  functions *reachable* from any jit site (BFS over resolved calls,
+  including callables passed as arguments, e.g. ``fori_loop`` bodies).
+
+Resolution is deliberately conservative: anything unresolvable simply
+drops out of the graph rather than guessing, so rules err toward
+missing exotic constructs instead of spamming false positives.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Set, Tuple, Union
+
+MARKER_RE = re.compile(r"#\s*reprolint:\s*([A-Za-z0-9_=,\- ]+)")
+
+# Named markers that suppress one specific rule (see rule docstrings).
+MARKER_RULES = {"sync-point": "RL002"}
+
+FunctionNode = Union[ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda]
+
+_BUILTIN_NAMES = {"int", "float", "bool", "len", "min", "max", "abs",
+                  "range", "sum"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    rule: str
+    path: str  # repo-relative posix path
+    line: int
+    col: int
+    message: str
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col} "
+                f"{self.rule} {self.message}")
+
+
+@dataclasses.dataclass
+class Binding:
+    kind: str  # "func" | "class" | "import" | "assign" | "param"
+    node: Optional[ast.AST] = None  # assign value / param arg node
+    target: Optional[object] = None  # FuncInfo | ClassInfo
+    dotted: str = ""  # canonical module path for imports
+    default: Optional[ast.expr] = None  # param default expression
+
+
+class Scope:
+    def __init__(self, parent: Optional["Scope"] = None):
+        self.parent = parent
+        self.bindings: Dict[str, Binding] = {}
+
+    def lookup(self, name: str) -> Optional[Binding]:
+        found = self.lookup_scope(name)
+        return found[0] if found else None
+
+    def lookup_scope(
+            self, name: str) -> Optional[Tuple[Binding, "Scope"]]:
+        scope: Optional[Scope] = self
+        while scope is not None:
+            if name in scope.bindings:
+                return scope.bindings[name], scope
+            scope = scope.parent
+        return None
+
+
+class FuncInfo:
+    def __init__(self, qualname: str, node: FunctionNode,
+                 file: "SourceFile", scope: Scope,
+                 cls: Optional["ClassInfo"] = None):
+        self.qualname = qualname
+        self.node = node
+        self.file = file
+        self.scope = scope  # the function's own scope
+        self.cls = cls  # set for direct methods only
+
+    @property
+    def name(self) -> str:
+        return self.qualname.rsplit(".", 1)[-1]
+
+    def qualified(self) -> str:
+        """``module:Qual.name`` form used by config patterns."""
+        return f"{self.file.module}:{self.qualname}"
+
+    def body(self) -> List[ast.AST]:
+        b = self.node.body
+        return b if isinstance(b, list) else [b]
+
+    def walk(self) -> Iterable[ast.AST]:
+        for stmt in self.body():
+            yield from ast.walk(stmt)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<FuncInfo {self.qualified()}>"
+
+
+class ClassInfo:
+    def __init__(self, name: str, file: "SourceFile"):
+        self.name = name
+        self.file = file
+        self.methods: Dict[str, FuncInfo] = {}
+        # self.<attr> = jax.jit(...) bindings found in any method
+        self.jit_attrs: Dict[str, "JitSite"] = {}
+
+
+@dataclasses.dataclass
+class JitSite:
+    file: "SourceFile"
+    node: ast.AST  # the jax.jit Call or the decorated FunctionDef
+    targets: List[FuncInfo]
+    donate: Tuple[int, ...] = ()
+    label: str = ""  # e.g. "self._decode" for diagnostics
+
+
+class SourceFile:
+    def __init__(self, path: Path, rel: str):
+        self.path = path
+        self.rel = rel
+        self.text = path.read_text()
+        self.tree = ast.parse(self.text, filename=str(path))
+        self.module = _module_name(rel)
+        self.markers = _collect_markers(self.text)
+        self.module_scope = Scope()
+        self.funcs: List[FuncInfo] = []
+        self.classes: Dict[str, ClassInfo] = {}
+
+
+def _module_name(rel: str) -> str:
+    parts = Path(rel).with_suffix("").parts
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _collect_markers(text: str) -> Dict[int, Set[str]]:
+    markers: Dict[int, Set[str]] = {}
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        m = MARKER_RE.search(line)
+        if not m:
+            continue
+        tokens = {t for t in re.split(r"[,\s]+", m.group(1).strip())
+                  if t}
+        markers.setdefault(lineno, set()).update(tokens)
+    return markers
+
+
+def collect_files(paths: Iterable[Union[str, Path]],
+                  exclude: Iterable[str] = ()) -> List[SourceFile]:
+    seen: Dict[str, SourceFile] = {}
+    root = Path.cwd()
+    exclude = list(exclude)
+    for p in paths:
+        p = Path(p)
+        candidates = [p] if p.is_file() else sorted(p.rglob("*.py"))
+        for f in candidates:
+            if f.suffix != ".py":
+                continue
+            try:
+                rel = f.resolve().relative_to(root).as_posix()
+            except ValueError:
+                rel = f.as_posix()
+            if rel in seen or any(pat in rel for pat in exclude):
+                continue
+            try:
+                seen[rel] = SourceFile(f, rel)
+            except (SyntaxError, UnicodeDecodeError):
+                continue
+    return list(seen.values())
+
+
+class _Indexer(ast.NodeVisitor):
+    """One pass over a module: scopes, functions, classes, imports."""
+
+    def __init__(self, file: SourceFile, index: "ProjectIndex"):
+        self.file = file
+        self.index = index
+        self.scope = file.module_scope
+        self.qual: List[str] = []
+        self.cls: Optional[ClassInfo] = None  # innermost *class body*
+        self.in_func = False
+
+    # -- imports ----------------------------------------------------
+    def visit_Import(self, node: ast.Import) -> None:
+        for alias in node.names:
+            name = alias.asname or alias.name.split(".")[0]
+            dotted = alias.name if alias.asname else name
+            self.scope.bindings[name] = Binding("import", dotted=dotted)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        base = node.module or ""
+        if node.level:  # relative import: resolve against this module
+            pkg = self.file.module.split(".")
+            keep = len(pkg) - node.level + 1
+            base = ".".join(pkg[:keep] + ([node.module]
+                                          if node.module else []))
+        for alias in node.names:
+            name = alias.asname or alias.name
+            self.scope.bindings[name] = Binding(
+                "import", dotted=f"{base}.{alias.name}".lstrip("."))
+
+    # -- defs -------------------------------------------------------
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        cls = ClassInfo(node.name, self.file)
+        self.file.classes[node.name] = cls
+        self.scope.bindings[node.name] = Binding("class", target=cls)
+        prev_cls, prev_qual = self.cls, self.qual
+        self.cls, self.qual = cls, self.qual + [node.name]
+        for child in node.body:
+            self.visit(child)
+        self.cls, self.qual = prev_cls, prev_qual
+
+    def _make_func(self, node: FunctionNode, name: str) -> FuncInfo:
+        qual = ".".join(self.qual + [name])
+        scope = Scope(parent=self.scope)
+        method_of = self.cls if not self.in_func else None
+        fi = FuncInfo(qual, node, self.file, scope, cls=method_of)
+        self.file.funcs.append(fi)
+        self.index.func_by_node[id(node)] = fi
+        args = node.args
+        pos = args.posonlyargs + args.args
+        pos_defaults = ([None] * (len(pos) - len(args.defaults))
+                        + list(args.defaults))
+        for a, d in zip(pos, pos_defaults):
+            scope.bindings[a.arg] = Binding("param", node=a, default=d)
+        for a, d in zip(args.kwonlyargs, args.kw_defaults):
+            scope.bindings[a.arg] = Binding("param", node=a, default=d)
+        for a in (args.vararg, args.kwarg):
+            if a is not None:
+                scope.bindings[a.arg] = Binding("param", node=a)
+        return fi
+
+    def _visit_function(self, node: FunctionNode, name: str,
+                        register: bool) -> None:
+        fi = self._make_func(node, name)
+        if register:
+            self.scope.bindings[name] = Binding("func", target=fi)
+            if fi.cls is not None:
+                fi.cls.methods[name] = fi
+        prev = (self.scope, self.qual, self.cls, self.in_func)
+        self.scope, self.qual = fi.scope, self.qual + [name]
+        self.cls, self.in_func = fi.cls, True
+        for child in fi.body():
+            self.visit(child)
+        self.scope, self.qual, self.cls, self.in_func = prev
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._visit_function(node, node.name, register=True)
+
+    def visit_AsyncFunctionDef(self, node) -> None:
+        self._visit_function(node, node.name, register=True)
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        self._visit_function(node, f"<lambda:{node.lineno}>",
+                             register=False)
+
+    # -- assignments ------------------------------------------------
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Name):
+                self.scope.bindings[tgt.id] = Binding(
+                    "assign", node=node.value)
+            elif isinstance(tgt, (ast.Tuple, ast.List)):
+                for i, elt in enumerate(tgt.elts):
+                    if isinstance(elt, ast.Name):
+                        sub = ast.Subscript(
+                            value=node.value,
+                            slice=ast.Constant(value=i),
+                            ctx=ast.Load())
+                        self.scope.bindings[elt.id] = Binding(
+                            "assign", node=sub)
+        self.visit(node.value)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        if node.value is not None:
+            if isinstance(node.target, ast.Name):
+                self.scope.bindings[node.target.id] = Binding(
+                    "assign", node=node.value)
+            self.visit(node.value)
+
+
+class ProjectIndex:
+    def __init__(self, files: List[SourceFile]):
+        self.files = sorted(files, key=lambda f: f.rel)
+        self.by_rel = {f.rel: f for f in self.files}
+        self.by_module = {f.module: f for f in self.files if f.module}
+        self.func_by_node: Dict[int, FuncInfo] = {}
+        self.scope_owner: Dict[int, FuncInfo] = {}
+        for f in self.files:
+            _Indexer(f, self).visit(f.tree)
+        for fi in self.func_by_node.values():
+            self.scope_owner[id(fi.scope)] = fi
+        self.jit_sites: List[JitSite] = []
+        self.site_by_node: Dict[int, JitSite] = {}
+        self._find_jit_sites()
+        self.reachable: Set[int] = set()  # id(FuncInfo.node)
+        self._compute_reachable()
+
+    # -- name resolution -------------------------------------------
+    def resolve_dotted(self, expr: ast.AST,
+                       scope: Scope) -> Optional[str]:
+        """Canonical dotted name for ``np.asarray``-style chains."""
+        if isinstance(expr, ast.Attribute):
+            base = self.resolve_dotted(expr.value, scope)
+            return f"{base}.{expr.attr}" if base else None
+        if isinstance(expr, ast.Name):
+            b = scope.lookup(expr.id)
+            if b is None:
+                return expr.id if expr.id in _BUILTIN_NAMES else None
+            if b.kind == "import":
+                return b.dotted
+            return None
+        return None
+
+    def _module_binding(self, dotted: str) -> Optional[Binding]:
+        if "." not in dotted:
+            return None
+        mod, name = dotted.rsplit(".", 1)
+        f = self.by_module.get(mod)
+        return f.module_scope.bindings.get(name) if f else None
+
+    def _factory_returns(self, fi: FuncInfo,
+                         depth: int) -> List[FuncInfo]:
+        """Inner functions returned by a factory (make_serve_step)."""
+        if isinstance(fi.node, ast.Lambda):
+            return self.resolve_callable(fi.node.body, fi.scope,
+                                         depth + 1)
+        out: List[FuncInfo] = []
+        for node in fi.walk():
+            if isinstance(node, ast.Return) and node.value is not None:
+                out.extend(self.resolve_callable(node.value, fi.scope,
+                                                 depth + 1))
+        return out
+
+    def resolve_callable(self, expr: ast.AST, scope: Scope,
+                         depth: int = 0) -> List[FuncInfo]:
+        """Resolve an expression to the tree functions it denotes."""
+        if depth > 8:
+            return []
+        if isinstance(expr, ast.Lambda):
+            fi = self.func_by_node.get(id(expr))
+            return [fi] if fi else []
+        if isinstance(expr, ast.Call):
+            # wrapper call: jax.jit(f) / functools.partial(f, ...)
+            dotted = self.resolve_dotted(expr.func, scope)
+            if dotted in ("jax.jit", "jit", "functools.partial",
+                          "partial", "jax.vmap", "jax.checkpoint",
+                          "jax.remat"):
+                if expr.args:
+                    return self.resolve_callable(expr.args[0], scope,
+                                                 depth + 1)
+                return []
+            # factory call: name bound from make_X(cfg)
+            out: List[FuncInfo] = []
+            for fac in self.resolve_callable(expr.func, scope,
+                                             depth + 1):
+                out.extend(self._factory_returns(fac, depth))
+            return out
+        if isinstance(expr, ast.Name):
+            b = scope.lookup(expr.id)
+            if b is None:
+                return []
+            if b.kind == "func":
+                return [b.target]  # type: ignore[list-item]
+            if b.kind == "import":
+                mb = self._module_binding(b.dotted)
+                if mb is not None and mb.kind == "func":
+                    return [mb.target]  # type: ignore[list-item]
+                return []
+            if b.kind == "assign" and b.node is not None:
+                return self.resolve_callable(b.node, scope, depth + 1)
+            return []
+        if isinstance(expr, ast.Attribute):
+            cls = self.instance_class(expr.value, scope)
+            if cls is not None:
+                if expr.attr in cls.methods:
+                    return [cls.methods[expr.attr]]
+                if expr.attr in cls.jit_attrs:
+                    return list(cls.jit_attrs[expr.attr].targets)
+                return []
+            dotted = self.resolve_dotted(expr, scope)
+            if dotted:
+                mb = self._module_binding(dotted)
+                if mb is not None and mb.kind == "func":
+                    return [mb.target]  # type: ignore[list-item]
+            return []
+        return []
+
+    def instance_class(self, expr: ast.AST,
+                       scope: Scope) -> Optional[ClassInfo]:
+        """Class of ``self`` or of ``x`` where ``x = SomeClass(..)``."""
+        if not isinstance(expr, ast.Name):
+            return None
+        found = scope.lookup_scope(expr.id)
+        if found is None:
+            return None
+        b, def_scope = found
+        if expr.id in ("self", "cls") and b.kind == "param":
+            owner = self.scope_owner.get(id(def_scope))
+            return owner.cls if owner else None
+        if b.kind == "assign" and isinstance(b.node, ast.Call):
+            callee = b.node.func
+            if isinstance(callee, ast.Name):
+                cb = scope.lookup(callee.id)
+                if cb is not None and cb.kind == "class":
+                    return cb.target  # type: ignore[return-value]
+                if cb is not None and cb.kind == "import":
+                    mb = self._module_binding(cb.dotted)
+                    if mb is not None and mb.kind == "class":
+                        return mb.target  # type: ignore[return-value]
+            dotted = self.resolve_dotted(callee, scope)
+            if dotted:
+                mb = self._module_binding(dotted)
+                if mb is not None and mb.kind == "class":
+                    return mb.target  # type: ignore[return-value]
+        return None
+
+    # -- jit sites --------------------------------------------------
+    def _donate_from(self, call: ast.Call) -> Tuple[int, ...]:
+        for kw in call.keywords:
+            if kw.arg != "donate_argnums":
+                continue
+            v = kw.value
+            if isinstance(v, ast.IfExp):
+                v = v.body  # (2,) if donate else () — take then-arm
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return (v.value,)
+            if isinstance(v, ast.Tuple):
+                return tuple(e.value for e in v.elts
+                             if isinstance(e, ast.Constant)
+                             and isinstance(e.value, int))
+        return ()
+
+    def _record_site(self, call: ast.Call, scope: Scope,
+                     file: SourceFile,
+                     label: str) -> Optional[JitSite]:
+        if id(call) in self.site_by_node or not call.args:
+            return None
+        targets = self.resolve_callable(call.args[0], scope)
+        site = JitSite(file=file, node=call, targets=targets,
+                       donate=self._donate_from(call), label=label)
+        self.jit_sites.append(site)
+        self.site_by_node[id(call)] = site
+        return site
+
+    def _is_jit_call(self, expr: ast.AST,
+                     scope: Scope) -> Optional[ast.Call]:
+        if isinstance(expr, ast.Call) and self.resolve_dotted(
+                expr.func, scope) in ("jax.jit", "jit"):
+            return expr
+        return None
+
+    def _find_jit_sites(self) -> None:
+        for f in self.files:
+            self._scan_jit_assigns(f.tree.body, f.module_scope, f,
+                                   None)
+            for fi in f.funcs:
+                self._scan_jit_decorators(fi, f)
+                self._scan_jit_assigns(fi.body(), fi.scope, f, fi)
+
+    def _scan_jit_decorators(self, fi: FuncInfo,
+                             f: SourceFile) -> None:
+        if isinstance(fi.node, ast.Lambda):
+            return
+        scope = fi.scope.parent or f.module_scope
+        for dec in fi.node.decorator_list:
+            if self.resolve_dotted(dec, scope) in ("jax.jit", "jit"):
+                self.jit_sites.append(JitSite(
+                    file=f, node=fi.node, targets=[fi],
+                    label=fi.qualname))
+            elif isinstance(dec, ast.Call):
+                dfn = self.resolve_dotted(dec.func, scope)
+                is_partial_jit = (
+                    dfn in ("functools.partial", "partial")
+                    and dec.args
+                    and self.resolve_dotted(dec.args[0], scope)
+                    in ("jax.jit", "jit"))
+                if is_partial_jit or dfn in ("jax.jit", "jit"):
+                    self.jit_sites.append(JitSite(
+                        file=f, node=fi.node, targets=[fi],
+                        donate=self._donate_from(dec),
+                        label=fi.qualname))
+
+    def _scan_jit_assigns(self, stmts: List[ast.AST], scope: Scope,
+                          f: SourceFile,
+                          fi: Optional[FuncInfo]) -> None:
+        for stmt in _iter_stmts_shallow(stmts):
+            if isinstance(stmt, ast.Assign):
+                call = self._is_jit_call(stmt.value, scope)
+                if call is None:
+                    continue
+                for tgt in stmt.targets:
+                    if (isinstance(tgt, ast.Attribute)
+                            and isinstance(tgt.value, ast.Name)
+                            and tgt.value.id == "self"
+                            and fi is not None and fi.cls is not None):
+                        site = self._record_site(
+                            call, scope, f, f"self.{tgt.attr}")
+                        if site is not None:
+                            fi.cls.jit_attrs[tgt.attr] = site
+                        break
+                    if isinstance(tgt, ast.Name):
+                        self._record_site(call, scope, f, tgt.id)
+                        break
+                else:
+                    self._record_site(call, scope, f, "")
+
+    def jit_site_for(self, callee: ast.AST,
+                     scope: Scope) -> Optional[JitSite]:
+        """The JitSite a call expression dispatches to, if any."""
+        if isinstance(callee, ast.Attribute):
+            cls = self.instance_class(callee.value, scope)
+            if cls is not None:
+                return cls.jit_attrs.get(callee.attr)
+        if isinstance(callee, ast.Name):
+            b = scope.lookup(callee.id)
+            if b is not None and b.kind == "assign" \
+                    and b.node is not None:
+                return self.site_by_node.get(id(b.node))
+            if b is not None and b.kind == "func" \
+                    and b.target is not None:
+                fi = b.target
+                for site in self.jit_sites:
+                    if site.node is fi.node:  # decorated def
+                        return site
+        return None
+
+    # -- reachability ----------------------------------------------
+    def _compute_reachable(self) -> None:
+        queue: List[FuncInfo] = []
+        for site in self.jit_sites:
+            queue.extend(site.targets)
+        seen: Set[int] = set()
+        while queue:
+            fi = queue.pop()
+            if id(fi.node) in seen:
+                continue
+            seen.add(id(fi.node))
+            for node in fi.walk():
+                if isinstance(node, ast.Lambda):
+                    sub = self.func_by_node.get(id(node))
+                    if sub:
+                        queue.append(sub)
+                    continue
+                if not isinstance(node, ast.Call):
+                    continue
+                queue.extend(self.resolve_callable(node.func, fi.scope))
+                # callables passed as args: fori_loop/scan/cond bodies
+                argexprs = list(node.args) + [k.value
+                                              for k in node.keywords]
+                for arg in argexprs:
+                    if isinstance(arg, (ast.Name, ast.Attribute)):
+                        queue.extend(self.resolve_callable(arg,
+                                                           fi.scope))
+        self.reachable = seen
+
+    def is_reachable(self, fi: FuncInfo) -> bool:
+        return id(fi.node) in self.reachable
+
+    def reachable_funcs(self) -> List[FuncInfo]:
+        return [fi for f in self.files for fi in f.funcs
+                if id(fi.node) in self.reachable]
+
+    # -- suppression ------------------------------------------------
+    def suppressed(self, v: Violation) -> bool:
+        f = self.by_rel.get(v.path)
+        if f is None:
+            return False
+        tokens: Set[str] = set()
+        tokens |= f.markers.get(v.line, set())
+        tokens |= f.markers.get(v.line - 1, set())
+        if "disable=ALL" in tokens or f"disable={v.rule}" in tokens:
+            return True
+        return any(MARKER_RULES.get(t) == v.rule for t in tokens)
+
+
+def _iter_stmts_shallow(stmts: List[ast.AST]) -> Iterable[ast.stmt]:
+    """Statements in ``stmts``, recursing into compound statements but
+    NOT into nested function bodies (those get their own scope pass)."""
+    for s in stmts:
+        if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if isinstance(s, ast.stmt):
+            yield s
+        for field in ("body", "orelse", "finalbody"):
+            sub = getattr(s, field, None)
+            if isinstance(sub, list) and sub \
+                    and isinstance(sub[0], ast.stmt):
+                yield from _iter_stmts_shallow(sub)
+        for h in getattr(s, "handlers", []):
+            yield from _iter_stmts_shallow(h.body)
+
+
+def stmt_for(node: ast.AST, fi: FuncInfo) -> Optional[ast.stmt]:
+    """Smallest statement in ``fi`` containing ``node``."""
+    target: Optional[ast.stmt] = None
+
+    def visit(stmts: List[ast.AST]) -> None:
+        nonlocal target
+        for s in stmts:
+            if not isinstance(s, ast.stmt):
+                continue
+            if not any(n is node for n in ast.walk(s)):
+                continue
+            target = s
+            for field in ("body", "orelse", "finalbody"):
+                sub = getattr(s, field, None)
+                if isinstance(sub, list):
+                    visit(sub)
+            for h in getattr(s, "handlers", []):
+                visit(h.body)
+            return
+
+    visit(fi.body())
+    return target
+
+
+def dotted_text(expr: ast.AST) -> Optional[str]:
+    """Literal dotted text of a Name/Attribute chain (``self.cache``)."""
+    if isinstance(expr, ast.Name):
+        return expr.id
+    if isinstance(expr, ast.Attribute):
+        base = dotted_text(expr.value)
+        return f"{base}.{expr.attr}" if base else None
+    return None

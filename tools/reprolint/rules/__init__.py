@@ -1,0 +1,12 @@
+"""Rule registry: maps rule IDs to ``check(index, cfg)`` callables."""
+from tools.reprolint.rules import (rl001_recompile, rl002_host_sync,
+                                   rl003_donation, rl004_pallas,
+                                   rl005_dtype)
+
+RULES = {
+    "RL001": rl001_recompile.check,
+    "RL002": rl002_host_sync.check,
+    "RL003": rl003_donation.check,
+    "RL004": rl004_pallas.check,
+    "RL005": rl005_dtype.check,
+}

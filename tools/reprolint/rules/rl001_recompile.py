@@ -1,0 +1,133 @@
+"""RL001 — recompile hazard: host materialization in jit-reachable code.
+
+``int()``, ``float()``, ``bool()``, ``.item()``, ``.tolist()`` or any
+``numpy.*`` call applied to a traced value inside a function reachable
+from a ``jax.jit`` site forces a device sync and bakes the value into
+the trace — the next call with a different value retraces and
+recompiles, which in the serving setting is a cold start by another
+name (decode and prefill must each compile exactly once).
+
+The check walks the call graph from every jit site (including factory
+bindings like ``serve = make_serve_step(cfg)`` and ``self._decode =
+jax.jit(...)``) and flags materializing calls whose argument is not
+*static-derivable*.  Static-derivable expressions — literals, values
+off ``.shape``/``.ndim``/``len()``, config attribute chains, parameters
+with scalar-literal defaults, and arithmetic over those — are concrete
+Python numbers at trace time, so converting them is legitimate
+(e.g. an expert-capacity ``int(N * k / E * factor)`` where N came from
+``x.shape``).
+
+Suppress a deliberate materialization with ``# reprolint:
+disable=RL001`` on the line (and think twice: inside jit it is almost
+always a bug).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from tools.reprolint.core import ProjectIndex, Scope, Violation
+
+# Attributes that yield arrays, not static metadata.
+_ARRAY_ATTRS = {"T", "mT", "real", "imag", "at"}
+_STATIC_CALLS = {"len", "min", "max", "abs", "sum", "range"}
+_CAST_BUILTINS = {"int", "float", "bool"}
+_MATERIALIZE_METHODS = {"item", "tolist"}
+
+
+def _is_static(expr: ast.AST, scope: Scope, index: ProjectIndex,
+               depth: int = 0) -> bool:
+    """True if ``expr`` is a concrete Python value at trace time."""
+    if depth > 12:
+        return False
+    if isinstance(expr, ast.Constant):
+        return True
+    if isinstance(expr, ast.Attribute):
+        if expr.attr in _ARRAY_ATTRS:
+            return False
+        # .shape/.ndim/.size/.dtype of anything is static under trace,
+        # and config-style attribute chains are host values; only a
+        # handful of attrs produce arrays (excluded above).
+        return True
+    if isinstance(expr, ast.Name):
+        found = scope.lookup_scope(expr.id)
+        if found is None:
+            return True  # builtin / unknown global: assume static
+        b, def_scope = found
+        if b.kind == "param":
+            return (isinstance(b.default, ast.Constant)
+                    and not isinstance(b.default.value, (str, bytes)))
+        if b.kind == "assign" and b.node is not None:
+            return _is_static(b.node, def_scope, index, depth + 1)
+        return b.kind in ("import", "func", "class")
+    if isinstance(expr, ast.Subscript):
+        return _is_static(expr.value, scope, index, depth + 1)
+    if isinstance(expr, (ast.BinOp,)):
+        return (_is_static(expr.left, scope, index, depth + 1)
+                and _is_static(expr.right, scope, index, depth + 1))
+    if isinstance(expr, ast.UnaryOp):
+        return _is_static(expr.operand, scope, index, depth + 1)
+    if isinstance(expr, ast.Compare):
+        return all(_is_static(e, scope, index, depth + 1)
+                   for e in [expr.left] + list(expr.comparators))
+    if isinstance(expr, ast.BoolOp):
+        return all(_is_static(v, scope, index, depth + 1)
+                   for v in expr.values)
+    if isinstance(expr, ast.IfExp):
+        return all(_is_static(e, scope, index, depth + 1)
+                   for e in (expr.test, expr.body, expr.orelse))
+    if isinstance(expr, (ast.Tuple, ast.List)):
+        return all(_is_static(e, scope, index, depth + 1)
+                   for e in expr.elts)
+    if isinstance(expr, ast.Call):
+        fn = expr.func
+        if isinstance(fn, ast.Name) and fn.id in _STATIC_CALLS:
+            return all(_is_static(a, scope, index, depth + 1)
+                       for a in expr.args)
+        return False
+    return False
+
+
+def _builtin_cast(call: ast.Call, scope: Scope) -> Optional[str]:
+    fn = call.func
+    if isinstance(fn, ast.Name) and fn.id in _CAST_BUILTINS \
+            and scope.lookup(fn.id) is None:
+        return fn.id
+    return None
+
+
+def check(index: ProjectIndex, cfg) -> List[Violation]:
+    out: List[Violation] = []
+    for fi in index.reachable_funcs():
+        for node in fi.walk():
+            if not isinstance(node, ast.Call):
+                continue
+            cast = _builtin_cast(node, fi.scope)
+            if cast is not None and node.args:
+                if not all(_is_static(a, fi.scope, index)
+                           for a in node.args):
+                    out.append(Violation(
+                        "RL001", fi.file.rel, node.lineno,
+                        node.col_offset,
+                        f"{cast}() on a traced value in jit-reachable "
+                        f"`{fi.qualname}` — bakes the value into the "
+                        f"trace; next distinct value recompiles"))
+                continue
+            fn = node.func
+            if isinstance(fn, ast.Attribute) \
+                    and fn.attr in _MATERIALIZE_METHODS \
+                    and not _is_static(fn.value, fi.scope, index):
+                out.append(Violation(
+                    "RL001", fi.file.rel, node.lineno, node.col_offset,
+                    f".{fn.attr}() in jit-reachable `{fi.qualname}` — "
+                    f"host sync + retrace per distinct value"))
+                continue
+            dotted = index.resolve_dotted(fn, fi.scope)
+            if dotted and (dotted == "numpy"
+                           or dotted.startswith("numpy.")):
+                out.append(Violation(
+                    "RL001", fi.file.rel, node.lineno, node.col_offset,
+                    f"numpy call `{dotted}` in jit-reachable "
+                    f"`{fi.qualname}` — materializes on host; use "
+                    f"jax.numpy"))
+    return out

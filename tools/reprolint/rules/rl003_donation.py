@@ -1,0 +1,108 @@
+"""RL003 — donation-after-use.
+
+``jax.jit(..., donate_argnums=...)`` lets XLA reuse an input buffer for
+the output (the KV cache update would otherwise double its memory), but
+the donated buffer is *invalid* the moment the call is dispatched.
+Reading it afterwards returns garbage or raises — and the failure is
+runtime-dependent, so it can survive CPU tests and explode on TPU.
+
+The check finds every call site that dispatches to a jit binding with
+literal ``donate_argnums`` (``self._decode = jax.jit(f,
+donate_argnums=(2,))`` attributes, local ``g = jax.jit(...)``
+bindings, and ``@functools.partial(jax.jit, ...)`` decorated defs) and
+verifies the expression passed at each donated position is rebound by
+the same statement (``out, self.cache = self._decode(..,
+self.cache, ..)``).  If not, any later read of that name in the same
+function is flagged — including the implicit next-iteration read when
+the call sits in a loop.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from tools.reprolint.core import (FuncInfo, ProjectIndex, Violation,
+                                  dotted_text, stmt_for)
+
+
+def _assign_target_names(stmt: ast.stmt) -> List[str]:
+    names: List[str] = []
+    targets: List[ast.AST] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = [stmt.target]
+    for tgt in targets:
+        if isinstance(tgt, (ast.Tuple, ast.List)):
+            targets.extend(tgt.elts)
+            continue
+        t = dotted_text(tgt)
+        if t:
+            names.append(t)
+    return names
+
+
+def _enclosing_loop(call: ast.Call,
+                    fi: FuncInfo) -> Optional[ast.stmt]:
+    for node in fi.walk():
+        if isinstance(node, (ast.For, ast.While)):
+            for sub in ast.walk(node):
+                if sub is call:
+                    return node
+    return None
+
+
+def _later_read(fi: FuncInfo, name: str,
+                after_line: int) -> Optional[ast.AST]:
+    for node in fi.walk():
+        if not isinstance(node, (ast.Name, ast.Attribute)):
+            continue
+        if not isinstance(getattr(node, "ctx", None), ast.Load):
+            continue
+        if dotted_text(node) == name and node.lineno > after_line:
+            return node
+    return None
+
+
+def check(index: ProjectIndex, cfg) -> List[Violation]:
+    out: List[Violation] = []
+    for f in index.files:
+        for fi in f.funcs:
+            for node in fi.walk():
+                if not isinstance(node, ast.Call):
+                    continue
+                site = index.jit_site_for(node.func, fi.scope)
+                if site is None or not site.donate:
+                    continue
+                stmt = stmt_for(node, fi)
+                rebound = _assign_target_names(stmt) if stmt else []
+                label = site.label or "jitted function"
+                for pos in site.donate:
+                    if pos >= len(node.args):
+                        continue
+                    name = dotted_text(node.args[pos])
+                    if name is None or name in rebound:
+                        continue
+                    loop = _enclosing_loop(node, fi)
+                    if loop is not None:
+                        out.append(Violation(
+                            "RL003", f.rel, node.lineno,
+                            node.col_offset,
+                            f"`{name}` donated to `{label}` "
+                            f"(donate_argnums includes {pos}) inside "
+                            f"a loop without rebinding — the next "
+                            f"iteration reads a donated buffer"))
+                        continue
+                    read = _later_read(fi, name,
+                                       getattr(stmt, "end_lineno",
+                                               node.lineno))
+                    if read is not None:
+                        out.append(Violation(
+                            "RL003", f.rel, read.lineno,
+                            read.col_offset,
+                            f"`{name}` read after being donated to "
+                            f"`{label}` at line {node.lineno} "
+                            f"(donate_argnums includes {pos}) — "
+                            f"donated buffers are invalid after the "
+                            f"call"))
+    return out

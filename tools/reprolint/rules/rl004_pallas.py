@@ -1,0 +1,397 @@
+"""RL004 — Pallas TPU kernel rules.
+
+Four checks over every ``pl.pallas_call`` site (in practice
+``src/repro/kernels/*/``):
+
+* **index_map arity + purity** — BlockSpec index maps run at *trace*
+  time to schedule DMA; they must take exactly ``len(grid) +
+  num_scalar_prefetch`` arguments and stay pure: no closure over
+  mutable/stateful bindings (a list/dict or an object constructed at
+  module scope), no ``self``, no Python ``if``/``for``/``while``
+  (tracer-dependent control flow would silently specialize the
+  schedule), and only ``jax.*``/``math.*`` calls inside.
+* **static VMEM footprint** — per-step working set (scratch_shapes +
+  double-buffered in/out block tiles) estimated with this repo's
+  default dims must stay under the per-core budget
+  (``vmem-budget-mib``, default 16); oversubscription is a
+  compile-time failure on real silicon that interpret-mode CI never
+  sees.
+* **tiling divisibility** — evaluable block-tile dims must be
+  lane/sublane friendly: last dim a multiple of 128 (or <= 128, one
+  padded lane tile, e.g. a LoRA rank of 64), second-to-last a
+  multiple of 8 (or <= 8).
+* **block-table masking** — every consumer of a block table
+  (parameters matching ``tbl``/``table``) must visibly handle ``-1``
+  (unallocated) entries: a ``jnp.maximum(tbl[...], 0)``/``clip`` on
+  the fetch path or a ``>= 0`` validity compare on the mask path.
+  A walk that forgets this reads the garbage block as real history.
+
+Shape names are evaluated against the repo's default dimension table
+(``_DIMS``); anything unevaluable skips the numeric checks rather than
+guessing.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from tools.reprolint.core import (FuncInfo, ProjectIndex, Scope,
+                                  SourceFile, Violation)
+
+# Default dim bindings for symbolic shape evaluation: the serving-bench
+# shapes, biased large so the estimate is conservative.
+_DIMS: Dict[str, int] = {
+    "B": 8, "K": 8, "H": 64, "G": 16, "hd": 128, "bs": 32, "sub": 32,
+    "qt": 256, "q_block": 512, "kv_block": 512, "s_block": 512,
+    "C": 512, "MB": 32, "NB": 64, "S": 2048, "T": 512, "D": 2048,
+    "O": 2048, "R": 64, "r": 64, "row_block": 8, "d_block": 2048,
+    "o_block": 2048, "N": 8, "E": 8, "n_s": 4, "n_sub": 1,
+}
+
+_DTYPE_BYTES = {"float64": 8, "float32": 4, "int32": 4, "uint32": 4,
+                "bfloat16": 2, "float16": 2, "int16": 2, "int8": 1,
+                "uint8": 1, "bool_": 1}
+
+_TABLE_PARAM_RE = re.compile(r"tbl|table")
+_PURE_CALL_PREFIXES = ("jax.", "math.")
+
+
+def _eval_dim(expr: ast.AST, scope: Scope,
+              depth: int = 0) -> Optional[int]:
+    if depth > 8:
+        return None
+    if isinstance(expr, ast.Constant):
+        return expr.value if isinstance(expr.value, int) else None
+    if isinstance(expr, ast.Name):
+        if expr.id in _DIMS:
+            return _DIMS[expr.id]
+        found = scope.lookup_scope(expr.id)
+        if found is None:
+            return None
+        b, def_scope = found
+        if b.kind == "assign" and b.node is not None:
+            return _eval_dim(b.node, def_scope, depth + 1)
+        if b.kind == "param" and isinstance(b.default, ast.Constant) \
+                and isinstance(b.default.value, int):
+            return b.default.value
+        return None
+    if isinstance(expr, ast.BinOp):
+        lhs = _eval_dim(expr.left, scope, depth + 1)
+        rhs = _eval_dim(expr.right, scope, depth + 1)
+        if lhs is None or rhs is None:
+            return None
+        try:
+            if isinstance(expr.op, ast.Mult):
+                return lhs * rhs
+            if isinstance(expr.op, ast.Add):
+                return lhs + rhs
+            if isinstance(expr.op, ast.Sub):
+                return lhs - rhs
+            if isinstance(expr.op, ast.FloorDiv):
+                return lhs // rhs
+            if isinstance(expr.op, ast.Mod):
+                return lhs % rhs
+        except ZeroDivisionError:
+            return None
+    return None
+
+
+def _eval_shape(expr: ast.AST,
+                scope: Scope) -> Optional[List[int]]:
+    """Tuple literal -> dims; squeezed ``None`` entries become 1.
+    Any unevaluable dim invalidates the whole shape (returns None)."""
+    if isinstance(expr, ast.Name):
+        b = scope.lookup(expr.id)
+        if b is not None and b.kind == "assign" and b.node is not None:
+            return _eval_shape(b.node, scope)
+        return None
+    if not isinstance(expr, (ast.Tuple, ast.List)):
+        return None
+    dims: List[int] = []
+    for e in expr.elts:
+        if isinstance(e, ast.Constant) and e.value is None:
+            dims.append(1)
+            continue
+        d = _eval_dim(e, scope)
+        if d is None:
+            return None
+        dims.append(d)
+    return dims
+
+
+def _dtype_bytes(expr: Optional[ast.AST], index: ProjectIndex,
+                 scope: Scope) -> int:
+    if expr is None:
+        return 4
+    dotted = index.resolve_dotted(expr, scope) or ""
+    for name, size in _DTYPE_BYTES.items():
+        if dotted.endswith("." + name):
+            return size
+    if isinstance(expr, ast.Constant) and isinstance(expr.value, str):
+        return _DTYPE_BYTES.get(expr.value, 4)
+    return 4
+
+
+def _kwarg(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _ends_with(index: ProjectIndex, expr: ast.AST, scope: Scope,
+               suffix: str) -> bool:
+    dotted = index.resolve_dotted(expr, scope)
+    return bool(dotted) and (dotted == suffix
+                             or dotted.endswith("." + suffix))
+
+
+class _PallasSite:
+    """One pallas_call with its specs pulled apart."""
+
+    def __init__(self, call: ast.Call, fi: FuncInfo,
+                 index: ProjectIndex):
+        self.call = call
+        self.fi = fi
+        scope = fi.scope
+        self.grid_rank: Optional[int] = None
+        self.num_prefetch = 0
+        self.block_specs: List[ast.Call] = []
+        self.scratch: List[ast.Call] = []
+        src: ast.Call = call
+        spec = _kwarg(call, "grid_spec")
+        if isinstance(spec, ast.Call):
+            src = spec
+            npf = _kwarg(spec, "num_scalar_prefetch")
+            if isinstance(npf, ast.Constant) \
+                    and isinstance(npf.value, int):
+                self.num_prefetch = npf.value
+        grid = _kwarg(src, "grid")
+        if isinstance(grid, ast.Tuple):
+            self.grid_rank = len(grid.elts)
+        elif isinstance(grid, ast.Name):
+            b = scope.lookup(grid.id)
+            if b is not None and b.kind == "assign" \
+                    and isinstance(b.node, ast.Tuple):
+                self.grid_rank = len(b.node.elts)
+        for key in ("in_specs", "out_specs"):
+            val = _kwarg(src, key)
+            items = val.elts if isinstance(val, (ast.Tuple, ast.List)) \
+                else [val] if val is not None else []
+            for item in items:
+                if isinstance(item, ast.Call) and _ends_with(
+                        index, item.func, scope, "BlockSpec"):
+                    self.block_specs.append(item)
+        scr = _kwarg(src, "scratch_shapes")
+        if isinstance(scr, (ast.Tuple, ast.List)):
+            for item in scr.elts:
+                if isinstance(item, ast.Call):
+                    self.scratch.append(item)
+
+    def index_maps(self, index: ProjectIndex) -> List[FuncInfo]:
+        maps: List[FuncInfo] = []
+        for spec in self.block_specs:
+            expr = _kwarg(spec, "index_map")
+            if expr is None and len(spec.args) >= 2:
+                expr = spec.args[1]
+            if expr is None:
+                continue
+            maps.extend(index.resolve_callable(expr, self.fi.scope))
+        return maps
+
+    def block_shape(self, spec: ast.Call
+                    ) -> Optional[List[Optional[int]]]:
+        expr = _kwarg(spec, "block_shape")
+        if expr is None and spec.args:
+            expr = spec.args[0]
+        if expr is None:
+            return None
+        return _eval_shape(expr, self.fi.scope)
+
+
+def _check_index_map(fi: FuncInfo, site: _PallasSite,
+                     index: ProjectIndex,
+                     out: List[Violation]) -> None:
+    node = fi.node
+    params = [a.arg for a in node.args.posonlyargs + node.args.args]
+    if site.grid_rank is not None:
+        want = site.grid_rank + site.num_prefetch
+        if len(params) != want:
+            out.append(Violation(
+                "RL004", fi.file.rel, node.lineno, node.col_offset,
+                f"index_map `{fi.name}` takes {len(params)} args but "
+                f"grid rank {site.grid_rank} + {site.num_prefetch} "
+                f"scalar-prefetch operands = {want}"))
+    local = set(params)
+    for sub in fi.walk():
+        if isinstance(sub, (ast.If, ast.For, ast.While)):
+            out.append(Violation(
+                "RL004", fi.file.rel, sub.lineno, sub.col_offset,
+                f"Python control flow in index_map `{fi.name}` — "
+                f"index maps must be branch-free (use jnp.where/"
+                f"jnp.maximum)"))
+        if isinstance(sub, ast.Call):
+            dotted = index.resolve_dotted(sub.func, fi.scope)
+            if dotted is None or not (
+                    dotted.startswith(_PURE_CALL_PREFIXES)
+                    or dotted in ("min", "max", "abs", "len")):
+                out.append(Violation(
+                    "RL004", fi.file.rel, sub.lineno, sub.col_offset,
+                    f"call to non-jax/math function in index_map "
+                    f"`{fi.name}` — index maps must be pure"))
+        if isinstance(sub, ast.Name) \
+                and isinstance(sub.ctx, ast.Load) \
+                and sub.id not in local:
+            if sub.id == "self":
+                out.append(Violation(
+                    "RL004", fi.file.rel, sub.lineno, sub.col_offset,
+                    f"index_map `{fi.name}` closes over `self` — "
+                    f"object state is invisible to the trace cache"))
+                continue
+            found = fi.scope.lookup_scope(sub.id)
+            if found is None:
+                continue
+            b, def_scope = found
+            if b.kind == "assign" and isinstance(
+                    b.node, (ast.List, ast.Dict, ast.Set,
+                             ast.ListComp, ast.DictComp, ast.SetComp,
+                             ast.Call)):
+                out.append(Violation(
+                    "RL004", fi.file.rel, sub.lineno, sub.col_offset,
+                    f"index_map `{fi.name}` closes over `{sub.id}`, "
+                    f"bound to a mutable/stateful value — the DMA "
+                    f"schedule would silently bake in trace-time "
+                    f"state"))
+
+
+def _check_table_masking(fi: FuncInfo, out: List[Violation]) -> None:
+    node = fi.node
+    params = [a.arg for a in node.args.posonlyargs + node.args.args]
+    tables = [p for p in params if _TABLE_PARAM_RE.search(p)]
+    for name in tables:
+        used = False
+        masked = False
+        for sub in fi.walk():
+            names_in = {n.id for n in ast.walk(sub)
+                        if isinstance(n, ast.Name)}
+            if isinstance(sub, ast.Name) and sub.id == name:
+                used = True
+            if isinstance(sub, ast.Compare) and name in names_in:
+                consts = [c.value for c in ast.walk(sub)
+                          if isinstance(c, ast.Constant)]
+                if 0 in consts:
+                    masked = True
+            if isinstance(sub, ast.Call):
+                fn = sub.func
+                attr = fn.attr if isinstance(fn, ast.Attribute) \
+                    else fn.id if isinstance(fn, ast.Name) else ""
+                if attr in ("maximum", "clip", "where") \
+                        and name in names_in:
+                    masked = True
+        if used and not masked:
+            out.append(Violation(
+                "RL004", fi.file.rel, node.lineno, node.col_offset,
+                f"`{fi.name}` consumes block table `{name}` without "
+                f"masking -1 entries (no maximum/clip/>=0 guard) — "
+                f"unallocated entries would read the garbage block "
+                f"as real history"))
+
+
+def _check_vmem(site: _PallasSite, index: ProjectIndex, cfg,
+                out: List[Violation]) -> None:
+    total = 0
+    for spec in site.block_specs:
+        dims = site.block_shape(spec)
+        if dims is None:
+            return  # unevaluable: skip the numeric check entirely
+        size = 1
+        for d in dims:
+            size *= d
+        total += size * 4 * 2  # f32-conservative, double-buffered
+        _check_tiling(site, spec, dims, out)
+    for scr in site.scratch:
+        if not scr.args:
+            continue
+        dims = _eval_shape(scr.args[0], site.fi.scope)
+        if dims is None:
+            return
+        size = 1
+        for d in dims:
+            size *= d
+        dt = scr.args[1] if len(scr.args) > 1 else _kwarg(scr, "dtype")
+        total += size * _dtype_bytes(dt, index, site.fi.scope)
+    budget = int(cfg.vmem_budget_mib * (1 << 20))
+    if total > budget:
+        out.append(Violation(
+            "RL004", site.fi.file.rel, site.call.lineno,
+            site.call.col_offset,
+            f"estimated per-step VMEM working set "
+            f"{total / (1 << 20):.1f} MiB exceeds the "
+            f"{cfg.vmem_budget_mib:.0f} MiB budget (blocks "
+            f"double-buffered + scratch, default dims)"))
+
+
+def _check_tiling(site: _PallasSite, spec: ast.Call,
+                  dims: Sequence[int],
+                  out: List[Violation]) -> None:
+    real = list(dims)
+    if not real:
+        return
+    lane = real[-1]
+    if lane > 128 and lane % 128 != 0:
+        out.append(Violation(
+            "RL004", site.fi.file.rel, spec.lineno, spec.col_offset,
+            f"block tile lane dim {lane} is neither <= 128 nor a "
+            f"multiple of 128 — pads every vector register"))
+    if len(real) >= 2:
+        sublane = real[-2]
+        if sublane > 8 and sublane % 8 != 0:
+            out.append(Violation(
+                "RL004", site.fi.file.rel, spec.lineno,
+                spec.col_offset,
+                f"block tile sublane dim {sublane} is neither <= 8 "
+                f"nor a multiple of 8 — pads every vector register"))
+
+
+def _pallas_sites(f: SourceFile,
+                  index: ProjectIndex) -> List[Tuple[ast.Call,
+                                                     FuncInfo]]:
+    sites = []
+    for fi in f.funcs:
+        for node in fi.walk():
+            if isinstance(node, ast.Call) and _ends_with(
+                    index, node.func, fi.scope, "pallas_call"):
+                sites.append((node, fi))
+    return sites
+
+
+def check(index: ProjectIndex, cfg) -> List[Violation]:
+    out: List[Violation] = []
+    seen_bodies = set()
+    for f in index.files:
+        for call, fi in _pallas_sites(f, index):
+            site = _PallasSite(call, fi, index)
+            for im in site.index_maps(index):
+                _check_index_map(im, site, index, out)
+                _check_table_masking(im, out)
+            _check_vmem(site, index, cfg, out)
+            if call.args:
+                for body in index.resolve_callable(call.args[0],
+                                                   fi.scope):
+                    if id(body.node) in seen_bodies:
+                        continue
+                    seen_bodies.add(id(body.node))
+                    _check_table_masking(body, out)
+    return dedup(out)
+
+
+def dedup(vs: List[Violation]) -> List[Violation]:
+    seen = set()
+    out = []
+    for v in vs:
+        key = (v.rule, v.path, v.line, v.col, v.message)
+        if key not in seen:
+            seen.add(key)
+            out.append(v)
+    return out

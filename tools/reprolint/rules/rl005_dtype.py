@@ -1,0 +1,83 @@
+"""RL005 — dtype drift: float64 creeping into jitted code.
+
+The serving stack is float32/bfloat16 end to end.  A single ``float64``
+reference inside jit-reachable code — an explicit ``jnp.float64``/
+``np.float64``, ``dtype="float64"``, ``astype(float)`` or
+``dtype=float`` (Python's ``float`` IS float64) — either silently
+halves TPU throughput (under ``jax_enable_x64``) or silently truncates
+(without it), and worst of all makes numerics depend on a global flag.
+Kernel files are always checked, jit-reachability covers the rest.
+
+Legitimate float64 host-side math (benchmark statistics, wall-clock
+accounting) lives outside the jit call graph and is not flagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from tools.reprolint.core import FuncInfo, ProjectIndex, Violation
+
+_F64_SUFFIXES = (".float64", ".float_", ".double")
+
+
+def _check_func(fi: FuncInfo, index: ProjectIndex,
+                out: List[Violation]) -> None:
+    for node in fi.walk():
+        dotted = index.resolve_dotted(node, fi.scope) \
+            if isinstance(node, (ast.Attribute, ast.Name)) else None
+        if dotted and dotted.endswith(_F64_SUFFIXES):
+            out.append(Violation(
+                "RL005", fi.file.rel, node.lineno, node.col_offset,
+                f"`{dotted}` in `{fi.qualname}` — the serving stack "
+                f"is f32/bf16; float64 numerics depend on the global "
+                f"x64 flag"))
+            continue
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        if isinstance(fn, ast.Attribute) and fn.attr == "astype" \
+                and node.args:
+            a = node.args[0]
+            if isinstance(a, ast.Name) and a.id == "float" \
+                    and fi.scope.lookup("float") is None:
+                out.append(Violation(
+                    "RL005", fi.file.rel, node.lineno,
+                    node.col_offset,
+                    f"astype(float) in `{fi.qualname}` — Python "
+                    f"float is float64; name the dtype explicitly"))
+            if isinstance(a, ast.Constant) and a.value == "float64":
+                out.append(Violation(
+                    "RL005", fi.file.rel, node.lineno,
+                    node.col_offset,
+                    f'astype("float64") in `{fi.qualname}`'))
+        for kw in node.keywords:
+            if kw.arg != "dtype":
+                continue
+            v = kw.value
+            if isinstance(v, ast.Name) and v.id == "float" \
+                    and fi.scope.lookup("float") is None:
+                out.append(Violation(
+                    "RL005", fi.file.rel, v.lineno, v.col_offset,
+                    f"dtype=float in `{fi.qualname}` — Python float "
+                    f"is float64; name the dtype explicitly"))
+            if isinstance(v, ast.Constant) and v.value == "float64":
+                out.append(Violation(
+                    "RL005", fi.file.rel, v.lineno, v.col_offset,
+                    f'dtype="float64" in `{fi.qualname}`'))
+
+
+def check(index: ProjectIndex, cfg) -> List[Violation]:
+    out: List[Violation] = []
+    seen: Set[int] = set()
+    funcs = list(index.reachable_funcs())
+    # kernel modules are device code wall to wall — check every def
+    for f in index.files:
+        if "/kernels/" in f.rel:
+            funcs.extend(f.funcs)
+    for fi in funcs:
+        if id(fi.node) in seen:
+            continue
+        seen.add(id(fi.node))
+        _check_func(fi, index, out)
+    return out
