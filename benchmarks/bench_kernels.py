@@ -35,7 +35,7 @@ def run():
     idx = jax.random.randint(ks[3], (R,), 0, N)
     ref = jax.jit(lambda *t: sgmv_ref(*t))
     t_ref = _time(ref, x, a, b, idx)
-    out_k = sgmv_apply(x, a, b, idx)
+    out_k = sgmv_apply(x, a, b, idx, use_kernel=True)
     err = float(jnp.max(jnp.abs(out_k - sgmv_ref(x, a, b, idx))))
     flops = 2 * R * D * r + 2 * R * r * O
     rows.append(csv_row("kernels/sgmv_ref", t_ref * 1e6,

@@ -52,10 +52,16 @@ from repro.models import transformer as tf
 from repro.models.cache import GARBAGE_BLOCK, init_paged_cache
 from repro.serverless.batching import Request
 from repro.serverless.traces import TraceSpec, make_workload
-from repro.serving import (CompileGuard, ContinuousRuntime, ServingConfig,
+from repro.serving import (CompileGuard, ContinuousRuntime, ServeRequest,
+                           ServingConfig,
                            replay_trace)
 
 from benchmarks.common import record_bench
+
+
+def _sr(req, prompt, adapter):
+    return ServeRequest(prompt=prompt, adapter=adapter, request=req)
+
 
 BLOCK = 8
 
@@ -204,7 +210,7 @@ def bench_long_prompt(cfg, params, old_largest_bucket: int) -> Dict:
     req = Request(req_id=0, fn_id="fn0", arrival=0.0, prompt_len=L,
                   output_len=6, slo_ttft=30.0)
     with CompileGuard({"prefill": 1}, runtime=rt) as guard:
-        res = rt.try_admit([(req, rng.integers(0, cfg.vocab_size, L,
+        res = rt.try_admit([_sr(req, rng.integers(0, cfg.vocab_size, L,
                                                dtype=np.int32), 0)])
         assert res is not None and res.slot_ids[0] >= 0, \
             "long prompt refused"

@@ -15,10 +15,28 @@ import jax
 import numpy as np
 
 from repro.configs import get_smoke
+from repro.core.lora import partition_lora
 from repro.models import transformer as tf
 from repro.serverless.traces import TraceSpec, make_workload
-from repro.serving import (ContinuousRuntime, ServingConfig, Telemetry,
-                           replay_trace, write_metrics_json)
+from repro.serving import (AdapterRegistry, ContinuousRuntime,
+                           ServingConfig, Telemetry, replay_trace,
+                           write_metrics_json)
+
+
+def _rand_adapter(params, seed):
+    """Random a AND b for one adapter (init leaves b = 0, i.e. a zero
+    delta — fine for shapes, useless for a multi-adapter demo)."""
+    _, bank = partition_lora(params)
+    one = jax.tree_util.tree_map(
+        lambda x: None if x is None else x[..., 0, :, :],
+        bank, is_leaf=lambda x: x is None)
+    leaves, treedef = jax.tree_util.tree_flatten(
+        one, is_leaf=lambda x: x is None)
+    ks = jax.random.split(jax.random.PRNGKey(seed), max(len(leaves), 1))
+    new = [None if lf is None else
+           jax.random.normal(k, lf.shape, lf.dtype) * 0.05
+           for lf, k in zip(leaves, ks)]
+    return jax.tree_util.tree_unflatten(treedef, new)
 
 
 def main():
@@ -64,6 +82,12 @@ def main():
         num_slots=args.slots, block_size=8, num_blocks=96,
         max_blocks_per_slot=8, prefill_chunk=16, decode_chunk=4)
     rt = ContinuousRuntime(cfg, params, scfg)
+    reg = AdapterRegistry(rt)
+    for a in range(args.adapters):
+        reg.load(f"fn{a}", _rand_adapter(params, 100 + a))
+    print(f"registry: {args.adapters} named adapters live in a "
+          f"{reg.capacity}-slot bank, one backbone resident "
+          f"({', '.join(reg.names())})")
     if args.arch != "llama2_7b":
         from repro.models.cache import state_bytes_per_slot
         print(f"{args.arch}: hybrid/attention-free stack — each slot pins "
@@ -75,7 +99,7 @@ def main():
                        output_len=args.output_len, slo_ttft=3.0)
              for a in range(args.adapters)]
     wl = make_workload(specs, seed=args.seed)
-    fn_adapter = {f"fn{a}": a for a in range(args.adapters)}
+    fn_adapter = {f"fn{a}": f"fn{a}" for a in range(args.adapters)}
     print(f"trace: {len(wl)} requests over {args.duration}s, "
           f"{args.adapters} bursty adapter functions, "
           f"{args.shared_prefix}-token shared system prompt per function")
@@ -138,6 +162,22 @@ def main():
         print(f"chunked prefill: {st['recomputed_tokens']} tokens "
               f"({rec:.0f}% of prompts) computed in "
               f"{st['prefill_chunks']} chunk dispatches — {tail}")
+    print("\nmixed-adapter stats (one SGMV-dispatched backbone, "
+          "per-slot deltas):")
+    print(f"  {'adapter':10s} {'slot':>4s} {'served':>6s} "
+          f"{'tokens':>7s} {'mean TTFT':>10s} {'p-worst':>9s}")
+    for name in reg.names():
+        mine = [r for r in ok if r.fn_id == name]
+        if not mine:
+            print(f"  {name:10s} {reg.slot_of(name):4d} {0:6d}")
+            continue
+        ttfts = [r.first_token - r.arrival for r in mine]
+        print(f"  {name:10s} {reg.slot_of(name):4d} {len(mine):6d} "
+              f"{sum(r.output_len for r in mine):7d} "
+              f"{np.mean(ttfts) * 1e3:8.1f}ms {np.max(ttfts) * 1e3:7.1f}ms")
+    print(f"  adapter loads {st['adapter_loads']}, unloads "
+          f"{st['adapter_unloads']}, rejected (unknown adapter) "
+          f"{st['rejected_unknown_adapter']}")
     print(f"decode compiles after warmup: {rt.decode_compiles()}, "
           f"prefill compiles: {rt.prefill_compiles()} "
           f"(fixed shapes -> exactly 1 each)")

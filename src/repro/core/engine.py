@@ -52,12 +52,13 @@ def make_chunked_prefill_step(cfg: ModelConfig):
 
     def chunked_prefill_step(params, tokens, start, last_idx, cache,
                              chunk_ids, block_tbl, *, adapter_idx=None,
-                             use_paged_kernel=False, state_rows=None):
+                             use_paged_kernel=False, lora_kernel=None,
+                             state_rows=None):
         logits, cache, _ = tf.forward(
             params, cfg, tokens, cache=cache, adapter_idx=adapter_idx,
             start_pos=start, last_pos=last_idx, block_tbl=block_tbl,
             chunk_ids=chunk_ids, use_paged_kernel=use_paged_kernel,
-            state_rows=state_rows)
+            lora_kernel=lora_kernel, state_rows=state_rows)
         return logits[:, -1], cache
 
     return chunked_prefill_step
@@ -70,11 +71,12 @@ def make_serve_step(cfg: ModelConfig):
     slot's logical blocks to pool blocks (continuous-batching serving)."""
 
     def serve_step(params, token, cache, pos, *, adapter_idx=None,
-                   block_tbl=None, use_paged_kernel=False, state_rows=None):
+                   block_tbl=None, use_paged_kernel=False, lora_kernel=None,
+                   state_rows=None):
         return tf.decode_step(params, cfg, token, cache, pos,
                               adapter_idx=adapter_idx, block_tbl=block_tbl,
                               use_paged_kernel=use_paged_kernel,
-                              state_rows=state_rows)
+                              lora_kernel=lora_kernel, state_rows=state_rows)
 
     return serve_step
 

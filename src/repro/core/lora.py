@@ -115,6 +115,27 @@ def select_adapter(adapters: Params, i: int) -> Params:
         is_leaf=lambda x: x is None)
 
 
+def take_adapter(adapters: Params, i: int) -> Params:
+    """Extract adapter i from a stacked bank along the ADAPTER axis (-3).
+
+    Unlike ``select_adapter`` (axis 0 — only valid for trees built by
+    ``stack_adapters`` before any layer stacking), this works on banks
+    living inside full param trees, where period-scanned layers prepend a
+    period axis: leaves are (..., N, D, r) / (..., N, r, O) and the
+    adapter axis is always third-from-last (the same axis
+    ``merge_adapter`` folds over)."""
+    return jax.tree_util.tree_map(
+        lambda x: None if x is None else jnp.take(x, i, axis=-3), adapters,
+        is_leaf=lambda x: x is None)
+
+
+def bank_size(adapters: Params) -> int:
+    """Capacity N of a stacked adapter bank (size of the adapter axis)."""
+    for leaf in jax.tree_util.tree_leaves(adapters):
+        return int(leaf.shape[-3])
+    raise ValueError("empty adapter tree")
+
+
 def init_adapter_bank(key, cfg: ModelConfig, num_adapters: int,
                       base_params: Optional[Params] = None) -> Params:
     """Fresh multi-LoRA bank matching ``base_params`` structure. Each adapter

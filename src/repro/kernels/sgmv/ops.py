@@ -1,15 +1,34 @@
 """Jitted public wrappers for SGMV: sort-by-adapter batching + kernel call.
 
-``sgmv_apply`` is the drop-in multi-LoRA projection used by the engine:
-it takes an *unsorted* batch with per-row adapter ids, scatters rows into
-adapter-pure blocks (sort + per-segment pad to the row-block size — the
-scheduler-side contract of the TPU kernel), runs the kernel, and gathers
-results back to request order.  On CPU (tests / this container) the kernel
-runs with interpret=True.
+``sgmv_apply`` is the drop-in multi-LoRA projection used by the model
+layers (``models.layers.lora_delta``) and therefore by every serving
+dispatch: it takes an *unsorted* batch with per-row adapter ids, scatters
+rows into adapter-pure blocks (sort + per-segment pad to the row-block
+size — the scheduler-side contract of the TPU kernel), runs the kernel,
+and gathers results back to request order.
+
+Dispatch contract (``use_kernel``):
+
+* ``None`` (default, what the serving hot path uses) — the Pallas kernel
+  on TPU, the gather-BMM reference (``ref.sgmv_ref``) everywhere else.
+  The reference is the bitwise oracle the kernel is tested against, so
+  off-TPU runs and one-adapter-per-runtime baselines produce identical
+  bits.
+* ``True`` — force the sorted kernel path (interpret mode off TPU, so
+  CPU tests exercise the real sort/pad/gather machinery).
+* ``False`` — force the gather-BMM reference.
+
+Row sanitization: rows whose ``idx`` falls outside ``[0, N)`` contribute
+a ZERO delta and never perturb in-range rows.  (Before this guard an
+out-of-range id shifted the sort's segment offsets and CORRUPTED other
+rows' results via destination collisions in the scatter buffer.)  The
+serving layer still rejects unloaded adapter ids at admission — the mask
+here is defense in depth, not the policy.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,17 +44,38 @@ def _on_tpu() -> bool:
 @functools.partial(jax.jit, static_argnames=("row_block", "scaling",
                                              "use_kernel"))
 def sgmv_apply(x, a, b, idx, *, row_block: int = 8, scaling: float = 1.0,
-               use_kernel: bool = True):
+               use_kernel: Optional[bool] = None):
     """Unsorted multi-LoRA projection. x: (R, D); idx: (R,) adapter per row;
     a: (N, D, r); b: (N, r, O). Returns (R, O).
 
     Layout: rows are sorted by adapter and each adapter's segment is padded
-    up to a multiple of ``row_block``, so every kernel block is adapter-pure.
-    Worst-case padded size R + N*row_block is static (jit-friendly)."""
+    up to a multiple of ``row_block``, so every kernel block is adapter-pure
+    (adapters with zero rows in the batch get a zero-width segment — no
+    padded block ever reads another adapter's rows).  Worst-case padded
+    size R + N*row_block is static (jit-friendly)."""
     R, D = x.shape
     N = a.shape[0]
+    # out-of-range adapter ids (unloaded registry slots, garbage rows):
+    # compute as adapter 0, then zero the delta — in-range rows unaffected
+    valid = (idx >= 0) & (idx < N)
+    idx = jnp.where(valid, idx, 0).astype(jnp.int32)
+    if use_kernel is None:
+        use_kernel = _on_tpu()
     if not use_kernel:
-        return sgmv_ref(x, a, b, idx, scaling=scaling)
+        y = sgmv_ref(x, a, b, idx, scaling=scaling)
+        return jnp.where(valid[:, None], y, jnp.zeros((), y.dtype))
+
+    if N == 1:
+        # degenerate one-adapter bank: the sort is the identity and every
+        # block is adapter 0 — skip the scatter/gather entirely and just
+        # pad the batch to whole row blocks (keeps the single-adapter
+        # baseline runtimes of bench_multi_lora on the same kernel)
+        S = ((R + row_block - 1) // row_block) * row_block
+        buf = jnp.zeros((S, D), x.dtype).at[:R].set(x)
+        block_adapter = jnp.zeros((S // row_block,), jnp.int32)
+        y = sgmv(buf, a, b, block_adapter, row_block=row_block,
+                 scaling=scaling, interpret=not _on_tpu())[:R]
+        return jnp.where(valid[:, None], y, jnp.zeros((), y.dtype))
 
     counts = jnp.bincount(idx, length=N)                       # (N,)
     padded = ((counts + row_block - 1) // row_block) * row_block
@@ -62,7 +102,8 @@ def sgmv_apply(x, a, b, idx, *, row_block: int = 8, scaling: float = 1.0,
 
     out_sorted = jnp.take(y, dest, axis=0)                      # (R, O) sorted
     inv = jnp.argsort(order)
-    return jnp.take(out_sorted, inv, axis=0)
+    out = jnp.take(out_sorted, inv, axis=0)
+    return jnp.where(valid[:, None], out, jnp.zeros((), out.dtype))
 
 
 def sgmv_tokens(x, a, b, idx, **kw):

@@ -31,13 +31,32 @@ def dense_init(key, d_in: int, d_out: int, dtype, *, bias: bool = False) -> Para
 
 
 # ------------------------------------------------------------------- dense/LoRA
+def lora_delta(x, lora: Params, adapter_idx, *, scaling: float = 1.0,
+               lora_kernel: Optional[bool] = None):
+    """Per-row multi-LoRA delta  scaling * (x @ A[idx]) @ B[idx].
+
+    x: (B, T, D); adapter_idx: (B,); lora holds stacked banks
+    {"a": (N, D, r), "b": (N, r, O)}.  This is the ONE multi-adapter
+    application path — attention q/k/v/o and the REC/SSD in/out
+    projections all route through it, so every serving dispatch applies
+    its deltas via rank-grouped SGMV (``kernels.sgmv.ops.sgmv_tokens``:
+    the Pallas kernel on TPU, the gather-BMM reference elsewhere;
+    ``lora_kernel`` forces one side — tests run the kernel in interpret
+    mode through it).  Rows whose id falls outside the bank get a zero
+    delta (the serving layer additionally rejects them at admission)."""
+    from repro.kernels.sgmv.ops import sgmv_tokens
+    return sgmv_tokens(x, lora["a"], lora["b"], adapter_idx,
+                       scaling=scaling, use_kernel=lora_kernel)
+
+
 def dense(x, p: Params, lora: Optional[Params] = None, *, scaling: float = 1.0,
-          adapter_idx=None):
+          adapter_idx=None, lora_kernel: Optional[bool] = None):
     """y = x @ W (+ b) (+ scaling * (x @ A) @ B)   — unmerged LoRA path.
 
     ``lora`` holds {"a": (D, r), "b": (r, O)} for a single adapter, or
     {"a": (N, D, r), "b": (N, r, O)} with ``adapter_idx`` (B,) for a
-    multi-LoRA batch (per-request adapter selection, SGMV semantics).
+    multi-LoRA batch (per-request adapter selection via :func:`lora_delta`,
+    SGMV semantics).
     """
     y = x @ p["w"]
     if "b" in p:
@@ -47,12 +66,8 @@ def dense(x, p: Params, lora: Optional[Params] = None, *, scaling: float = 1.0,
         if adapter_idx is None:
             y = y + scaling * ((x @ a) @ b)
         else:
-            # gather-based reference SGMV: x (B, T, D), idx (B,)
-            ag = jnp.take(a, adapter_idx, axis=0)          # (B, D, r)
-            bg = jnp.take(b, adapter_idx, axis=0)          # (B, r, O)
-            y = y + scaling * jnp.einsum(
-                "btr,bro->bto", jnp.einsum("btd,bdr->btr", x, ag), bg
-            ).astype(y.dtype)
+            y = y + lora_delta(x, lora, adapter_idx, scaling=scaling,
+                               lora_kernel=lora_kernel).astype(y.dtype)
     return y
 
 
@@ -254,7 +269,8 @@ def apply_attention(p: Params, cfg: ModelConfig, x, *, positions,
                     window: Optional[int] = None, adapter_idx=None,
                     use_chunked: bool = False, use_rope: bool = True,
                     block_tbl=None, chunk_ids=None,
-                    use_paged_kernel: bool = False):
+                    use_paged_kernel: bool = False,
+                    lora_kernel: Optional[bool] = None):
     """GQA attention with optional KV cache (decode) and cross-attention.
 
     x: (B, T, D). positions: (T,) or (B, T) absolute positions of x tokens.
@@ -283,12 +299,15 @@ def apply_attention(p: Params, cfg: ModelConfig, x, *, positions,
     lora = p.get("lora", {})
     s = cfg.lora.scaling if cfg.lora else 1.0
 
-    q = dense(x, p["wq"], lora.get("q"), scaling=s, adapter_idx=adapter_idx)
+    q = dense(x, p["wq"], lora.get("q"), scaling=s, adapter_idx=adapter_idx,
+              lora_kernel=lora_kernel)
     src = kv_x if kv_x is not None else x
     k = dense(src, p["wk"], lora.get("k") if kv_x is None else None,
-              scaling=s, adapter_idx=adapter_idx if kv_x is None else None)
+              scaling=s, adapter_idx=adapter_idx if kv_x is None else None,
+              lora_kernel=lora_kernel)
     v = dense(src, p["wv"], lora.get("v") if kv_x is None else None,
-              scaling=s, adapter_idx=adapter_idx if kv_x is None else None)
+              scaling=s, adapter_idx=adapter_idx if kv_x is None else None,
+              lora_kernel=lora_kernel)
     q = q.reshape(B, T, H, hd)
     k = k.reshape(B, -1, K, hd)
     v = v.reshape(B, -1, K, hd)
@@ -320,7 +339,8 @@ def apply_attention(p: Params, cfg: ModelConfig, x, *, positions,
         out = paged_prefill_gqa(q, kp, vp, block_tbl, positions,
                                 window=window, use_kernel=use_paged_kernel)
         out = dense(out.reshape(B, T, H * hd), p["wo"], lora.get("o"),
-                    scaling=s, adapter_idx=adapter_idx)
+                    scaling=s, adapter_idx=adapter_idx,
+                    lora_kernel=lora_kernel)
         return out, new_cache
     if cache is not None and "kp" in cache and kv_x is None:
         # Paged decode: per-row single-token write into the block pool, then
@@ -344,7 +364,8 @@ def apply_attention(p: Params, cfg: ModelConfig, x, *, positions,
             out = paged_decode_gqa(q[:, 0], kp, vp, block_tbl, pos,
                                    window=window)
             out = dense(out.reshape(B, T, H * hd), p["wo"], lora.get("o"),
-                        scaling=s, adapter_idx=adapter_idx)
+                        scaling=s, adapter_idx=adapter_idx,
+                        lora_kernel=lora_kernel)
             return out, new_cache
         phys = jnp.maximum(block_tbl, 0)                         # (B, MB)
         k = kp[:, phys].transpose(1, 2, 3, 0, 4).reshape(B, -1, K, hd)
@@ -383,7 +404,8 @@ def apply_attention(p: Params, cfg: ModelConfig, x, *, positions,
         out = attention_core(q, k, v, mask)
 
     out = out.reshape(B, T, H * hd)
-    out = dense(out, p["wo"], lora.get("o"), scaling=s, adapter_idx=adapter_idx)
+    out = dense(out, p["wo"], lora.get("o"), scaling=s, adapter_idx=adapter_idx,
+                lora_kernel=lora_kernel)
     return out, new_cache
 
 

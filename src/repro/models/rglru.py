@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
-from repro.models.layers import _normal, causal_conv1d
+from repro.models.layers import _normal, causal_conv1d, lora_delta
 
 Params = Dict[str, Any]
 _C = 8.0
@@ -103,7 +103,9 @@ def apply_rglru_block(p: Params, cfg: ModelConfig, x, *,
                       state: Optional[Params] = None,
                       seq_lens=None,
                       lora: Optional[Params] = None, lora_scaling: float = 1.0,
-                      adapter_idx=None) -> Tuple[jnp.ndarray, Params]:
+                      adapter_idx=None,
+                      lora_kernel: Optional[bool] = None
+                      ) -> Tuple[jnp.ndarray, Params]:
     """x: (B, T, D). state: {"conv": (B, W-1, Di), "h": (B, Di)}.
 
     T == 1 with state is the decode recurrence.  T > 1 with state is
@@ -118,10 +120,9 @@ def apply_rglru_block(p: Params, cfg: ModelConfig, x, *,
         if adapter_idx is None:
             u = u + lora_scaling * ((x @ a_l) @ b_l)
         else:
-            ag = jnp.take(a_l, adapter_idx, axis=0)
-            bg = jnp.take(b_l, adapter_idx, axis=0)
-            u = u + lora_scaling * jnp.einsum(
-                "btr,bro->bto", jnp.einsum("btd,bdr->btr", x, ag), bg)
+            u = u + lora_delta(x, lora["in"], adapter_idx,
+                               scaling=lora_scaling,
+                               lora_kernel=lora_kernel).astype(u.dtype)
     u, new_conv = causal_conv1d(
         u, p["conv"], state["conv"] if state else None, seq_lens=seq_lens)
     a, i = _gates(p, u)
@@ -149,8 +150,7 @@ def apply_rglru_block(p: Params, cfg: ModelConfig, x, *,
         if adapter_idx is None:
             out = out + lora_scaling * ((y @ a2) @ b2)
         else:
-            ag = jnp.take(a2, adapter_idx, axis=0)
-            bg = jnp.take(b2, adapter_idx, axis=0)
-            out = out + lora_scaling * jnp.einsum(
-                "btr,bro->bto", jnp.einsum("btd,bdr->btr", y, ag), bg)
+            out = out + lora_delta(y, lora["out"], adapter_idx,
+                                   scaling=lora_scaling,
+                                   lora_kernel=lora_kernel).astype(out.dtype)
     return out, {"conv": new_conv, "h": h_last}

@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
-from repro.models.layers import _normal, apply_norm, causal_conv1d, norm_init
+from repro.models.layers import (_normal, apply_norm, causal_conv1d,
+                                 lora_delta, norm_init)
 
 Params = Dict[str, Any]
 
@@ -132,7 +133,9 @@ def apply_ssd(p: Params, cfg: ModelConfig, x, *,
               state: Optional[Params] = None,
               seq_lens=None,
               lora: Optional[Params] = None, lora_scaling: float = 1.0,
-              adapter_idx=None) -> Tuple[jnp.ndarray, Optional[Params]]:
+              adapter_idx=None,
+              lora_kernel: Optional[bool] = None
+              ) -> Tuple[jnp.ndarray, Optional[Params]]:
     """Full Mamba-2 block. x: (B, T, D).
 
     state: {"conv": (B, W-1, Di), "ssm": (B, nh, hd, S)}.  T == 1 with
@@ -150,10 +153,8 @@ def apply_ssd(p: Params, cfg: ModelConfig, x, *,
         if adapter_idx is None:
             extra = lora_scaling * ((x @ a) @ bmat)
         else:
-            ag = jnp.take(a, adapter_idx, axis=0)
-            bg = jnp.take(bmat, adapter_idx, axis=0)
-            extra = lora_scaling * jnp.einsum(
-                "btr,bro->bto", jnp.einsum("btd,bdr->btr", x, ag), bg)
+            extra = lora_delta(x, lora["in"], adapter_idx,
+                               scaling=lora_scaling, lora_kernel=lora_kernel)
         ez, exs, eB, eC, edt = jnp.split(
             extra, [Di, 2 * Di, 2 * Di + S, 2 * Di + 2 * S], axis=-1)
         z, xs, Bm, Cm, dt = z + ez, xs + exs, Bm + eB, Cm + eC, dt + edt
@@ -192,8 +193,7 @@ def apply_ssd(p: Params, cfg: ModelConfig, x, *,
         if adapter_idx is None:
             out = out + lora_scaling * ((y @ a2) @ b2)
         else:
-            ag = jnp.take(a2, adapter_idx, axis=0)
-            bg = jnp.take(b2, adapter_idx, axis=0)
-            out = out + lora_scaling * jnp.einsum(
-                "btr,bro->bto", jnp.einsum("btd,bdr->btr", y, ag), bg)
+            out = out + lora_delta(y, lora["out"], adapter_idx,
+                                   scaling=lora_scaling,
+                                   lora_kernel=lora_kernel).astype(out.dtype)
     return out, {"conv": new_conv, "ssm": h_final}

@@ -175,6 +175,7 @@ def _apply_layer(kind: str, lp: Params, cfg: ModelConfig, x, *, positions,
                  enc_out, use_chunked: bool, fill_cache: bool,
                  block_tbl=None, chunk_ids=None,
                  use_paged_kernel: bool = False,
+                 lora_kernel: Optional[bool] = None,
                  state_rows=None, state_seq=None):
     """One residual block. Returns (x, new_cache, aux_loss).
 
@@ -197,7 +198,8 @@ def _apply_layer(kind: str, lp: Params, cfg: ModelConfig, x, *, positions,
             mask_kind=mask_kind, prefix_len=prefix_len,
             window=cfg.sliding_window, adapter_idx=adapter_idx,
             use_chunked=use_chunked, use_rope=True, block_tbl=block_tbl,
-            chunk_ids=chunk_ids, use_paged_kernel=use_paged_kernel)
+            chunk_ids=chunk_ids, use_paged_kernel=use_paged_kernel,
+            lora_kernel=lora_kernel)
         if ring_overflow:
             # SWA prefill longer than the window: keep only the last Tc K/V.
             from repro.models.layers import dense, rope
@@ -206,9 +208,11 @@ def _apply_layer(kind: str, lp: Params, cfg: ModelConfig, x, *, positions,
             lora = lp["attn"].get("lora", {})
             s = cfg.lora.scaling if cfg.lora else 1.0
             k = dense(h, lp["attn"]["wk"], lora.get("k"), scaling=s,
-                      adapter_idx=adapter_idx).reshape(B, T, K, hd)
+                      adapter_idx=adapter_idx,
+                      lora_kernel=lora_kernel).reshape(B, T, K, hd)
             v = dense(h, lp["attn"]["wv"], lora.get("v"), scaling=s,
-                      adapter_idx=adapter_idx).reshape(B, T, K, hd)
+                      adapter_idx=adapter_idx,
+                      lora_kernel=lora_kernel).reshape(B, T, K, hd)
             pos2 = positions if positions.ndim == 2 else \
                 jnp.broadcast_to(positions[None], (B, T))
             k = rope(k, pos2, cfg.rope_theta)
@@ -236,13 +240,14 @@ def _apply_layer(kind: str, lp: Params, cfg: ModelConfig, x, *, positions,
             st = cache_lib.gather_slot_state(cache, state_rows, positions)
             mix, upd = apply_rglru_block(
                 lp["rec"], cfg, h, state=st, seq_lens=state_seq, lora=lora,
-                lora_scaling=cfg.lora.scaling, adapter_idx=adapter_idx)
+                lora_scaling=cfg.lora.scaling, adapter_idx=adapter_idx,
+                lora_kernel=lora_kernel)
             new_cache = cache_lib.scatter_slot_state(cache, upd, state_rows)
         else:
             mix, new_cache = apply_rglru_block(
                 lp["rec"], cfg, h, state=cache if not fill_cache else None,
                 lora=lora, lora_scaling=cfg.lora.scaling,
-                adapter_idx=adapter_idx)
+                adapter_idx=adapter_idx, lora_kernel=lora_kernel)
         x = x + mix
     elif kind == SSD:
         lora = lp["ssd"].get("lora")
@@ -250,13 +255,14 @@ def _apply_layer(kind: str, lp: Params, cfg: ModelConfig, x, *, positions,
             st = cache_lib.gather_slot_state(cache, state_rows, positions)
             mix, upd = apply_ssd(
                 lp["ssd"], cfg, h, state=st, seq_lens=state_seq, lora=lora,
-                lora_scaling=cfg.lora.scaling, adapter_idx=adapter_idx)
+                lora_scaling=cfg.lora.scaling, adapter_idx=adapter_idx,
+                lora_kernel=lora_kernel)
             new_cache = cache_lib.scatter_slot_state(cache, upd, state_rows)
         else:
             mix, new_cache = apply_ssd(
                 lp["ssd"], cfg, h, state=cache if not fill_cache else None,
                 lora=lora, lora_scaling=cfg.lora.scaling,
-                adapter_idx=adapter_idx)
+                adapter_idx=adapter_idx, lora_kernel=lora_kernel)
         x = x + mix
     else:
         raise ValueError(kind)
@@ -301,6 +307,7 @@ def _run_stack(params, cfg: ModelConfig, x, *, positions, cache, mask_kind,
                prefix_len, adapter_idx, enc_out, use_chunked, fill_cache,
                remat: bool, block_tbl=None, chunk_ids=None,
                use_paged_kernel: bool = False,
+               lora_kernel: Optional[bool] = None,
                state_rows=None, state_seq=None):
     pat = cfg.pattern
     aux_total = jnp.zeros((), jnp.float32)
@@ -317,7 +324,7 @@ def _run_stack(params, cfg: ModelConfig, x, *, positions, cache, mask_kind,
                 adapter_idx=adapter_idx, enc_out=enc_out,
                 use_chunked=use_chunked, fill_cache=fill_cache,
                 block_tbl=block_tbl, chunk_ids=chunk_ids,
-                use_paged_kernel=use_paged_kernel,
+                use_paged_kernel=use_paged_kernel, lora_kernel=lora_kernel,
                 state_rows=state_rows, state_seq=state_seq)
             new_cs[f"p{j}"] = nc
             aux = aux + a
@@ -344,7 +351,7 @@ def _run_stack(params, cfg: ModelConfig, x, *, positions, cache, mask_kind,
             adapter_idx=adapter_idx, enc_out=enc_out,
             use_chunked=use_chunked, fill_cache=fill_cache,
             block_tbl=block_tbl, chunk_ids=chunk_ids,
-            use_paged_kernel=use_paged_kernel,
+            use_paged_kernel=use_paged_kernel, lora_kernel=lora_kernel,
             state_rows=state_rows, state_seq=state_seq)
         new_tail.append(nc)
         aux_total = aux_total + a
@@ -373,6 +380,7 @@ def forward(params: Params, cfg: ModelConfig, tokens, *,
             start_pos: Optional[jnp.ndarray] = None,
             block_tbl=None, chunk_ids=None,
             use_paged_kernel: bool = False,
+            lora_kernel: Optional[bool] = None,
             state_rows=None
             ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
     """Train (cache=None) or prefill (cache=zeros pytree → filled).
@@ -414,7 +422,7 @@ def forward(params: Params, cfg: ModelConfig, tokens, *,
         prefix_len=prefix_len, adapter_idx=adapter_idx, enc_out=enc_out,
         use_chunked=use_chunked, fill_cache=cache is not None, remat=remat,
         block_tbl=block_tbl, chunk_ids=chunk_ids,
-        use_paged_kernel=use_paged_kernel,
+        use_paged_kernel=use_paged_kernel, lora_kernel=lora_kernel,
         state_rows=state_rows, state_seq=state_seq)
     if last_pos is not None:
         # bucketed serving prefill: rows are right-padded, so the logit that
@@ -436,6 +444,7 @@ def forward(params: Params, cfg: ModelConfig, tokens, *,
 def decode_step(params: Params, cfg: ModelConfig, token, cache, pos, *,
                 adapter_idx=None, block_tbl=None,
                 use_paged_kernel: bool = False,
+                lora_kernel: Optional[bool] = None,
                 state_rows=None
                 ) -> Tuple[jnp.ndarray, Dict]:
     """ONE decode step. token: (B,) int32; pos: () int32 absolute position,
@@ -461,7 +470,7 @@ def decode_step(params: Params, cfg: ModelConfig, token, cache, pos, *,
         prefix_len=0, adapter_idx=adapter_idx, enc_out=None,
         use_chunked=False, fill_cache=False, remat=False,
         block_tbl=block_tbl, use_paged_kernel=use_paged_kernel,
-        state_rows=state_rows)
+        lora_kernel=lora_kernel, state_rows=state_rows)
     return _logits(params, cfg, x)[:, 0], new_cache
 
 

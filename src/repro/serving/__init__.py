@@ -1,6 +1,10 @@
 """Continuous-batching serving runtime (paper §4.2 + §4.4, real compute).
 
 Layout:
+  * ``adapters`` — live multi-LoRA registry: load/unload/swap adapter
+                   weights in a fixed-capacity stacked bank while the
+                   runtime serves (free-list slot reuse, in-flight pins,
+                   prefix purge on unload — zero re-jit on churn).
   * ``kv_pool``  — host-side paged KV block manager with a refcounted
                    lifecycle (free -> live -> cached -> evicted).
   * ``prefix``   — hash-trie mapping full prompt blocks to physical pool
@@ -30,19 +34,24 @@ Layout:
                    dynamic half of ``tools/reprolint``'s RL001;
                    docs/static-analysis.md).
 """
+from repro.serving.adapters import AdapterRegistry
 from repro.serving.kv_pool import BlockPool, blocks_for_tokens
 from repro.serving.compile_guard import (CompileBudgetExceeded,
                                          CompileGuard)
 from repro.serving.metrics import MetricsRegistry
 from repro.serving.prefix import PrefixCache
-from repro.serving.runtime import ContinuousRuntime, ServingConfig
-from repro.serving.replay import replay_trace
+from repro.serving.runtime import (AdapterConfig, ContinuousRuntime,
+                                   DecodeConfig, PrefillConfig,
+                                   ServeRequest, ServingConfig)
+from repro.serving.replay import replay_requests, replay_trace
 from repro.serving.slots import AdmissionScheduler, SlotTable
 from repro.serving.telemetry import Telemetry, write_metrics_json
 
 __all__ = [
-    "AdmissionScheduler", "BlockPool", "CompileBudgetExceeded",
-    "CompileGuard", "ContinuousRuntime", "MetricsRegistry",
-    "PrefixCache", "ServingConfig", "SlotTable", "Telemetry",
-    "blocks_for_tokens", "replay_trace", "write_metrics_json",
+    "AdapterConfig", "AdapterRegistry", "AdmissionScheduler", "BlockPool",
+    "CompileBudgetExceeded", "CompileGuard", "ContinuousRuntime",
+    "DecodeConfig", "MetricsRegistry", "PrefillConfig", "PrefixCache",
+    "ServeRequest", "ServingConfig", "SlotTable", "Telemetry",
+    "blocks_for_tokens", "replay_requests", "replay_trace",
+    "write_metrics_json",
 ]

@@ -19,7 +19,7 @@ import numpy as np
 from repro.serverless.batching import Request
 from repro.serverless.simulator import SimResult
 from repro.serving import telemetry as tm
-from repro.serving.runtime import ContinuousRuntime
+from repro.serving.runtime import ContinuousRuntime, ServeRequest
 from repro.serving.slots import AdmissionScheduler, SlotState
 
 
@@ -174,14 +174,21 @@ def replay_trace(runtime: ContinuousRuntime, workload: Sequence[Dict],
             if not batch:
                 continue
             res = runtime.try_admit(
-                [(r, prompts[r.req_id], fn_adapter[r.fn_id]) for r in batch])
+                [ServeRequest(prompt=prompts[r.req_id],
+                              adapter=fn_adapter[r.fn_id],
+                              arrival=r.arrival,
+                              max_new_tokens=r.output_len,
+                              request=r) for r in batch])
             if res is None and len(batch) > 1:
                 # group doesn't fit the remaining blocks — shrink to one
                 sched.requeue_front(batch[1:])
                 batch = batch[:1]
                 res = runtime.try_admit(
-                    [(batch[0], prompts[batch[0].req_id],
-                      fn_adapter[batch[0].fn_id])])
+                    [ServeRequest(prompt=prompts[batch[0].req_id],
+                                  adapter=fn_adapter[batch[0].fn_id],
+                                  arrival=batch[0].arrival,
+                                  max_new_tokens=batch[0].output_len,
+                                  request=batch[0])])
             if res is None:                  # blocks short: requeue, decode on
                 sched.requeue_front(batch)
                 if runtime.slots.num_active == 0 and runtime.pool.in_use == 0:
@@ -190,6 +197,20 @@ def replay_trace(runtime: ContinuousRuntime, workload: Sequence[Dict],
                         "num_blocks or shrink max_blocks_per_slot / "
                         "prompt lengths")
                 break
+            if res.rejected:
+                # admission-side rejections (unknown/unloaded adapter —
+                # fits() was pre-filtered above): the surviving per-item
+                # result lists align with the remaining batch order
+                rej = {id(r) for r in res.rejected}
+                for r in res.rejected:
+                    if tel is not None:
+                        tel.instant(tm.EVT_REJECT, tm.TRACK_QUEUE, now,
+                                    req_id=r.req_id, fn_id=r.fn_id)
+                    log("reject", r.req_id,
+                        detail=f"adapter for {r.fn_id} not loaded")
+                batch = [r for r in batch if id(r) not in rej]
+                if not batch:
+                    continue
             t_disp = now
             now += res.dt
             if tel is not None:
@@ -310,3 +331,35 @@ def replay_trace(runtime: ContinuousRuntime, workload: Sequence[Dict],
                 ).observe((r.done - r.first_token)
                           / max(r.output_len - 1, 1))
     return SimResult("continuous-real", requests, 0.0, 0.0), events
+
+
+def replay_requests(runtime: ContinuousRuntime,
+                    requests: Sequence[ServeRequest], *,
+                    prefill_group: Optional[int] = None,
+                    slo_abandon: bool = True,
+                    collect_events: bool = False,
+                    telemetry: Optional[tm.Telemetry] = None
+                    ) -> Tuple[SimResult, List[ReplayEvent]]:
+    """Typed replay entry: a list of ``ServeRequest`` objects instead of
+    the (workload dicts, fn_adapter map, prompts dict) kwarg spread of
+    ``replay_trace``.  Each request carries its own prompt tokens and
+    adapter name; req_ids are positional (the returned ``SimResult``
+    records line up with the input order)."""
+    workload: List[Dict] = []
+    prompts: Dict[int, np.ndarray] = {}
+    fn_adapter: Dict[str, object] = {}
+    for i, sr in enumerate(requests):
+        prompt = np.asarray(sr.prompt)
+        fn = str(sr.adapter)
+        fn_adapter[fn] = 0 if sr.adapter is None else sr.adapter
+        workload.append(dict(
+            req_id=i, fn_id=fn, arrival=float(sr.arrival),
+            prompt_len=len(prompt),
+            output_len=max(int(sr.max_new_tokens), 1),
+            slo_ttft=float("inf")))
+        prompts[i] = prompt
+    return replay_trace(runtime, workload, fn_adapter,
+                        prefill_group=prefill_group,
+                        slo_abandon=slo_abandon,
+                        collect_events=collect_events,
+                        prompts=prompts, telemetry=telemetry)

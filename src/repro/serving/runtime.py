@@ -91,6 +91,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -110,20 +111,50 @@ from repro.serving.telemetry import Telemetry, host_bubble_fraction
 
 
 @dataclasses.dataclass(frozen=True)
+class PrefillConfig:
+    """Chunked paged prefill — the join path's ONE compiled shape."""
+    chunk: int = 32                  # tokens per chunked-prefill dispatch
+    #   (must be a multiple of block_size; ONE compiled prefill shape
+    #   serves every prompt length)
+    rows: int = 4                    # fixed row width of that one shape:
+    #   group admissions advance their chunk loops side by side in one
+    #   dispatch; partial groups pad with garbage rows (NOT a bucket — the
+    #   chunk dimension never changes and still compiles exactly once)
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeConfig:
+    """The fixed-shape jitted decode loop."""
+    chunk: int = 4                   # tokens per jitted decode dispatch
+    eos_id: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class AdapterConfig:
+    """Multi-LoRA serving: the stacked adapter bank and its dispatch."""
+    max_live: Optional[int] = None   # AdapterRegistry capacity (bank slots);
+    #   None = size the registry to the bank already in ``params``
+    lora_rank: Optional[int] = None  # bank rank; adapters loaded with a
+    #   smaller rank are zero-padded up to it (None = whatever the bank has)
+    sgmv_kernel: Optional[bool] = None  # LoRA-delta dispatch: None = auto
+    #   (Pallas SGMV on TPU, gather-BMM reference elsewhere — bitwise-equal
+    #   oracle), True = force the kernel (interpret off-TPU), False = ref
+
+
+@dataclasses.dataclass(frozen=True, init=False)
 class ServingConfig:
+    """Runtime shape + policy knobs, grouped by subsystem.
+
+    Construct either with nested groups (``ServingConfig(prefill=
+    PrefillConfig(chunk=64))``) or with the legacy flat kwargs
+    (``ServingConfig(prefill_chunk=64)``) — mixing a nested group object
+    with a flat kwarg of the SAME group is an error, not a merge.  Flat
+    reads (``scfg.prefill_chunk``) keep working as read-through
+    properties, so existing call sites never see the nesting."""
     num_slots: int = 8
     block_size: int = 16
     num_blocks: int = 64             # physical blocks incl. the garbage block
     max_blocks_per_slot: int = 8
-    prefill_chunk: int = 32          # tokens per chunked-prefill dispatch
-    #   (must be a multiple of block_size; ONE compiled prefill shape
-    #   serves every prompt length)
-    prefill_rows: int = 4            # fixed row width of that one shape:
-    #   group admissions advance their chunk loops side by side in one
-    #   dispatch; partial groups pad with garbage rows (NOT a bucket — the
-    #   chunk dimension never changes and still compiles exactly once)
-    decode_chunk: int = 4            # tokens per jitted decode dispatch
-    eos_id: Optional[int] = None
     use_kernel: bool = True          # in-kernel block-table walk for paged
     #   attention (Pallas on TPU, fused jnp block walk elsewhere); False =
     #   the gather-based reference path
@@ -132,6 +163,110 @@ class ServingConfig:
     #   instead of allocating them; the chunk loop skips their compute
     window_reclamation: bool = True  # sliding-window configs: release
     #   blocks that slid fully out of the window after each decode chunk
+    prefill: PrefillConfig = PrefillConfig()
+    decode: DecodeConfig = DecodeConfig()
+    adapters: AdapterConfig = AdapterConfig()
+
+    # legacy flat kwarg -> (group field, field inside the group)
+    _FLAT = {
+        "prefill_chunk": ("prefill", "chunk"),
+        "prefill_rows": ("prefill", "rows"),
+        "decode_chunk": ("decode", "chunk"),
+        "eos_id": ("decode", "eos_id"),
+        "max_live_adapters": ("adapters", "max_live"),
+        "lora_rank": ("adapters", "lora_rank"),
+        "sgmv_kernel": ("adapters", "sgmv_kernel"),
+    }
+    _GROUPS = {"prefill": PrefillConfig, "decode": DecodeConfig,
+               "adapters": AdapterConfig}
+
+    def __init__(self, num_slots: int = 8, block_size: int = 16,
+                 num_blocks: int = 64, max_blocks_per_slot: int = 8,
+                 use_kernel: bool = True, prefix_sharing: bool = True,
+                 window_reclamation: bool = True,
+                 prefill: Optional[PrefillConfig] = None,
+                 decode: Optional[DecodeConfig] = None,
+                 adapters: Optional[AdapterConfig] = None,
+                 **flat: Any):
+        groups: Dict[str, Any] = {"prefill": prefill, "decode": decode,
+                                  "adapters": adapters}
+        over: Dict[str, Dict[str, Any]] = {g: {} for g in self._GROUPS}
+        for k, v in flat.items():
+            if k not in self._FLAT:
+                raise TypeError(
+                    f"ServingConfig got an unexpected keyword {k!r}")
+            g, f = self._FLAT[k]
+            if groups[g] is not None:
+                raise ValueError(
+                    f"pass {g}=... or the flat kwarg {k!r}, not both")
+            over[g][f] = v
+        for g, cls_ in self._GROUPS.items():
+            if groups[g] is None:
+                groups[g] = cls_(**over[g])
+        for name, val in (("num_slots", num_slots),
+                          ("block_size", block_size),
+                          ("num_blocks", num_blocks),
+                          ("max_blocks_per_slot", max_blocks_per_slot),
+                          ("use_kernel", use_kernel),
+                          ("prefix_sharing", prefix_sharing),
+                          ("window_reclamation", window_reclamation),
+                          ("prefill", groups["prefill"]),
+                          ("decode", groups["decode"]),
+                          ("adapters", groups["adapters"])):
+            object.__setattr__(self, name, val)
+
+    # flat read-through views (the pre-nesting field names)
+    @property
+    def prefill_chunk(self) -> int:
+        return self.prefill.chunk
+
+    @property
+    def prefill_rows(self) -> int:
+        return self.prefill.rows
+
+    @property
+    def decode_chunk(self) -> int:
+        return self.decode.chunk
+
+    @property
+    def eos_id(self) -> Optional[int]:
+        return self.decode.eos_id
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One admission-ready request — the typed unit ``try_admit`` takes.
+
+    Replaces the ``(Request, prompt_tokens, adapter:int)`` tuples (still
+    accepted for one release, with a DeprecationWarning).  ``adapter`` is
+    a registry NAME (resolved to a bank slot at the API boundary by the
+    runtime's ``AdapterRegistry``) or a raw bank slot int (validated
+    against the bank); ``None`` means slot 0 — the backbone-default
+    adapter every bank reserves in single-tenant runs.
+
+    ``request`` carries the underlying trace record when the caller has
+    one (``replay_trace``); otherwise a fresh ``Request`` is synthesized
+    so lifecycle accounting (breakdown flags, SLO fields) keeps working.
+    """
+    prompt: Any                      # (L,) int token ids (np/list)
+    adapter: Optional[Any] = None    # registry name (str) | bank slot (int)
+    arrival: float = 0.0
+    max_new_tokens: int = 1
+    request: Optional[Request] = None
+
+    _auto_id = 0                     # class-level: synthesized req_id seq
+
+    def ensure_request(self) -> Request:
+        if self.request is None:
+            ServeRequest._auto_id += 1
+            self.request = Request(
+                req_id=-ServeRequest._auto_id,  # negative: never collides
+                #   with trace req_ids (traces number from 0 upward)
+                fn_id=str(self.adapter), arrival=self.arrival,
+                prompt_len=len(self.prompt),
+                output_len=max(int(self.max_new_tokens), 1),
+                slo_ttft=float("inf"))
+        return self.request
 
 
 @dataclasses.dataclass
@@ -232,6 +367,10 @@ class ContinuousRuntime:
              "(one per stalled slot per decode dispatch)"),
             ("rejected_too_long", "requests dropped: prompt + output "
              "exceed slot KV capacity (graceful, never a raise mid-trace)"),
+            ("rejected_unknown_adapter", "requests dropped at admission: "
+             "adapter name not in the registry / bank slot out of range "
+             "(the decode path would compute a zero delta, but serving an "
+             "unloaded adapter silently is a correctness bug)"),
             ("reclaimed_blocks", "blocks returned mid-flight (window)"),
             ("admit_syncs", "deliberate device syncs during admission "
              "(one whole-batch logit transfer per final prefill "
@@ -239,6 +378,17 @@ class ContinuousRuntime:
         ):
             self.metrics.counter(name, help_)
         self.stats = self.metrics.counter_view()
+        # multi-LoRA: bank capacity N read off the params' stacked lora
+        # leaves (adapter axis -3); None = no bank in the tree (backbone
+        # only — every adapter id but 0/None is rejected at admission).
+        # ``serving.adapters.AdapterRegistry`` attaches itself here and
+        # takes over name resolution + slot lifecycle.
+        from repro.core.lora import partition_lora
+        _, bank = partition_lora(params)
+        leaves = jax.tree_util.tree_leaves(bank)
+        self.bank_slots: Optional[int] = (
+            int(leaves[0].shape[-3]) if leaves else None)
+        self.adapters = None         # Optional[AdapterRegistry]
         # host-bubble accounting: wall windows of every post-warmup device
         # dispatch (jitted call + result sync).  Always recorded — the
         # bubble fraction is a metric, not a telemetry feature.
@@ -253,6 +403,7 @@ class ContinuousRuntime:
                 logits, cache = serve(params, tok, cache, pos,
                                       adapter_idx=ai, block_tbl=tbl,
                                       use_paged_kernel=scfg.use_kernel,
+                                      lora_kernel=scfg.adapters.sgmv_kernel,
                                       state_rows=srows)
                 nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
                 return (nxt, cache, pos + 1), nxt
@@ -273,6 +424,7 @@ class ContinuousRuntime:
             return chunk_step(params, tokens, start, last_idx, pool_cache,
                               chunk_ids, tbl, adapter_idx=ai,
                               use_paged_kernel=scfg.use_kernel,
+                              lora_kernel=scfg.adapters.sgmv_kernel,
                               state_rows=srows)
 
         self._decode = jax.jit(decode_chunk, donate_argnums=(2,))
@@ -313,6 +465,64 @@ class ContinuousRuntime:
         if "rejected_too_long" not in req.breakdown:
             self.stats["rejected_too_long"] += 1
         req.breakdown["rejected_too_long"] = 1.0
+
+    def reject_unknown_adapter(self, req: Request) -> None:
+        """Count an unknown-adapter rejection once per request (same
+        idempotency contract as ``reject_too_long``)."""
+        if "rejected_unknown_adapter" not in req.breakdown:
+            self.stats["rejected_unknown_adapter"] += 1
+        req.breakdown["rejected_unknown_adapter"] = 1.0
+
+    def _resolve_adapter(self, adapter) -> Optional[int]:
+        """Registry name / bank slot -> validated bank slot, or None if the
+        id cannot be served.  Pure host dict/int work — admission planning
+        calls this per item with no device interaction."""
+        if adapter is None:
+            adapter = 0
+        if isinstance(adapter, str):
+            if self.adapters is None:
+                raise ValueError(
+                    f"adapter name {adapter!r} needs an AdapterRegistry "
+                    f"attached to the runtime (serving.adapters)")
+            return self.adapters.resolve(adapter)   # None when unknown
+        slot = int(adapter)
+        if self.bank_slots is None:
+            return slot if slot == 0 else None      # backbone-only params
+        if not 0 <= slot < self.bank_slots:
+            return None
+        if self.adapters is not None and not self.adapters.slot_loaded(slot):
+            return None                             # unloaded/free slot
+        return slot
+
+    def _coerce_admit_items(self, items) -> Tuple[
+            List[Tuple[Request, np.ndarray, int]], List[Request]]:
+        """Normalize ``try_admit`` input — ``ServeRequest`` objects or the
+        deprecated ``(Request, prompt, adapter:int)`` tuples — into
+        resolved ``(Request, prompt, bank_slot)`` triples, rejecting items
+        whose adapter cannot be resolved."""
+        out: List[Tuple[Request, np.ndarray, int]] = []
+        rejected: List[Request] = []
+        warned = False
+        for it in items:
+            if isinstance(it, ServeRequest):
+                req, prompt, adapter = it.ensure_request(), it.prompt, \
+                    it.adapter
+            else:
+                if not warned:
+                    warnings.warn(
+                        "(Request, prompt_tokens, adapter) tuples to "
+                        "try_admit are deprecated; pass ServeRequest "
+                        "objects (adapter by registry name)",
+                        DeprecationWarning, stacklevel=3)
+                    warned = True
+                req, prompt, adapter = it
+            slot = self._resolve_adapter(adapter)
+            if slot is None:
+                self.reject_unknown_adapter(req)
+                rejected.append(req)
+                continue
+            out.append((req, np.asarray(prompt), slot))
+        return out, rejected
 
     # ----------------------------------------------------------- admission
     def _plan_blocks(self, items: Sequence[Tuple[Request, np.ndarray, int]]
@@ -450,15 +660,23 @@ class ContinuousRuntime:
             firsts[i] = int(synced[len(starts[i]) - 1][i].argmax())
         return firsts
 
-    def try_admit(self, items: Sequence[Tuple[Request, np.ndarray, int]]
-                  ) -> Optional[AdmitResult]:
-        """Join ``(request, prompt_tokens, adapter)`` tuples into free slots.
+    def try_admit(self, items: Sequence[Any]) -> Optional[AdmitResult]:
+        """Join ``ServeRequest`` items into free slots.
 
-        Oversized items (``fits`` fails) are never fatal: they are dropped
-        from the group, counted in ``stats["rejected_too_long"]``, flagged
-        in ``request.breakdown``, and reported via ``AdmitResult.rejected``
-        — so one oversized request cannot kill a whole trace replay.  The
-        per-item result lists align with the surviving items.
+        Each item names its adapter by registry name (or raw bank slot);
+        resolution happens HERE, at the API boundary — the hot path below
+        only ever sees validated bank slots.  Legacy ``(Request,
+        prompt_tokens, adapter:int)`` tuples are still accepted for one
+        release (DeprecationWarning).
+
+        Unserveable items are never fatal: oversized prompts (``fits``
+        fails -> ``stats["rejected_too_long"]``) and unknown/unloaded
+        adapters (``stats["rejected_unknown_adapter"]``) are dropped from
+        the group, flagged in ``request.breakdown``, and reported via
+        ``AdmitResult.rejected`` — so one bad request cannot kill a whole
+        trace replay.  The per-item result lists align with the surviving
+        items.  Admitted items pin their adapter's registry slot until
+        they finish (``AdapterRegistry.unload`` refuses pinned slots).
 
         All-or-nothing for the surviving items: returns None (no state
         change beyond the rejection count and prefix-cache eviction) if
@@ -474,9 +692,9 @@ class ContinuousRuntime:
         recomputed.  The partially-filled tail block is never shared: the
         new request gets a private copy filled by its own chunk loop."""
         assert len(items) > 0
-        rejected: List[Request] = []
+        resolved, rejected = self._coerce_admit_items(items)
         kept: List[Tuple[Request, np.ndarray, int]] = []
-        for req, prompt, adapter in items:
+        for req, prompt, adapter in resolved:
             if self.fits(len(prompt), max(req.output_len, 1)):
                 kept.append((req, prompt, adapter))
             else:
@@ -574,12 +792,23 @@ class ContinuousRuntime:
             else:
                 slot_ids.append(sid)
                 self.slots.bind(st, first)
+                if self.adapters is not None:
+                    # in-flight requests pin their adapter: unload/swap of
+                    # a bank slot some live decode row still reads would
+                    # change that request's results mid-stream
+                    self.adapters.pin(adapter)
         self._sample_gauges()
         return AdmitResult(slot_ids, first_tokens, finished, total_dt,
                            shared_blocks=[len(p[0]) for p in plans],
                            rejected=rejected)
 
     # -------------------------------------------------------------- decode
+    def _unpin(self, st: SlotState) -> None:
+        """Release a finished/aborted slot's adapter pin (no-op without a
+        registry — legacy int-adapter runtimes have nothing to pin)."""
+        if self.adapters is not None:
+            self.adapters.unpin(st.adapter)
+
     def _ensure_blocks(self) -> Tuple[List[int], List[SlotState]]:
         """On-demand allocation for this chunk's writes; stall on shortage,
         force-evict one slot if *everyone* stalls (progress guarantee).
@@ -619,6 +848,8 @@ class ContinuousRuntime:
         scfg = self.scfg
         t_plan0 = self._timer()
         stalled, aborted = self._ensure_blocks()
+        for s in aborted:
+            self._unpin(s)
         # a stall step = one slot riding one chunk with discarded outputs;
         # ReplayEvent already logged these per-slot, the runtime never
         # counted them (the ISSUE-6 counter-asymmetry satellite)
@@ -671,6 +902,7 @@ class ContinuousRuntime:
             s.produced += len(accept)
             if eos_hit or s.produced >= s.budget:
                 self.pool.free(self.slots.release(s.sid))
+                self._unpin(s)
                 finished.append(s)
             else:
                 s.pos += scfg.decode_chunk

@@ -20,8 +20,14 @@ from repro.models.cache import (has_slot_state, init_paged_cache,
 from repro.models.config import REC, SSD
 from repro.serverless.batching import Request
 from repro.serverless.traces import TraceSpec, make_workload
-from repro.serving import (CompileGuard, ContinuousRuntime, ServingConfig,
+from repro.serving import (CompileGuard, ContinuousRuntime, ServeRequest,
+                           ServingConfig,
                            replay_trace)
+
+
+def _sr(req, prompt, adapter):
+    return ServeRequest(prompt=prompt, adapter=adapter, request=req)
+
 
 NUM_SLOTS, BS, MB = 3, 8, 4
 
@@ -119,7 +125,7 @@ def test_hybrid_decode_bitwise_vs_whole_batch_reference(model_fixture,
     L, steps = 10, 5                 # admit allocates 2 blocks: pos 10..15
     prompts = [rng.integers(0, cfg.vocab_size, L, dtype=np.int32)
                for _ in range(2)]
-    res = rt.try_admit([(_req(i, L, 8), prompts[i], i + 1)
+    res = rt.try_admit([_sr(_req(i, L, 8), prompts[i], i + 1)
                         for i in range(2)])
     assert res is not None and res.slot_ids == [0, 1]
     serving = _serving_steps(cfg, params, rt, steps)
@@ -141,7 +147,7 @@ def test_hybrid_prefill_state_bitwise_vs_reference(model_fixture, request):
     L = 12                               # 2 chunks of 8: real continuation
     prompts = [rng.integers(0, cfg.vocab_size, L, dtype=np.int32)
                for _ in range(2)]
-    res = rt.try_admit([(_req(i, L, 8), prompts[i], i + 1)
+    res = rt.try_admit([_sr(_req(i, L, 8), prompts[i], i + 1)
                         for i in range(2)])
     assert res.slot_ids == [0, 1]
 
@@ -215,7 +221,7 @@ def test_hybrid_stall_does_not_corrupt_output(rec_model):
                              use_kernel=False)
         rt = ContinuousRuntime(cfg, params, scfg)
         reqs = [_req(i, 8, 9) for i in range(2)]
-        res = rt.try_admit([(reqs[i], prompts[i], i) for i in range(2)])
+        res = rt.try_admit([_sr(reqs[i], prompts[i], i) for i in range(2)])
         out = {sid: [tok] for sid, tok in
                zip(res.slot_ids, res.first_tokens)}
         stalls = 0
@@ -248,12 +254,12 @@ def test_slot_reuse_reads_zero_state(ssd_model):
     def serve_b(warm_first):
         rt = _mk_rt(cfg, params, prefix_sharing=False)
         if warm_first:
-            res = rt.try_admit([(_req(0, 10, 4), pa, 1)])
+            res = rt.try_admit([_sr(_req(0, 10, 4), pa, 1)])
             assert res.slot_ids == [0]
             while rt.decode() is not None:
                 pass                      # A finishes; slot 0 recycled
             assert rt.slots.num_active == 0
-        res = rt.try_admit([(_req(1, 10, 6), pb, 2)])
+        res = rt.try_admit([_sr(_req(1, 10, 6), pb, 2)])
         assert res.slot_ids == [0]        # same slot as A used
         toks = [res.first_tokens[0]]
         for _ in range(6):
@@ -338,7 +344,7 @@ def test_attention_free_stack_not_kv_bounded(ssd_model):
     assert rt.fits(L, 8) and rt.admit_cost_blocks(L) == 0
     prompt = np.random.default_rng(4).integers(0, cfg.vocab_size, L,
                                                dtype=np.int32)
-    res = rt.try_admit([(_req(0, L, 8), prompt, 1)])
+    res = rt.try_admit([_sr(_req(0, L, 8), prompt, 1)])
     assert res is not None and res.slot_ids == [0]
     assert rt.pool.in_use == 0            # nothing was allocated
     produced = 1

@@ -27,7 +27,8 @@ def test_sgmv_matches_oracle(R, D, r, O, N, rb, dtype):
     b = (jax.random.normal(ks[2], (N, r, O), jnp.float32) * 0.1).astype(dtype)
     idx = jax.random.randint(ks[3], (R,), 0, N)
     ref = sgmv_ref(x, a, b, idx, scaling=2.0)
-    out = sgmv_apply(x, a, b, idx, row_block=rb, scaling=2.0)
+    out = sgmv_apply(x, a, b, idx, row_block=rb, scaling=2.0,
+                     use_kernel=True)
     tol = 1e-4 if dtype == jnp.float32 else 3e-2
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32),
@@ -50,7 +51,7 @@ def test_sgmv_property_random_batches(R, N, r, seed):
     a = jax.random.normal(ks[1], (N, D, r), jnp.float32) * 0.2
     b = jax.random.normal(ks[2], (N, r, O), jnp.float32) * 0.2
     idx = jax.random.randint(ks[3], (R,), 0, N)
-    out = sgmv_apply(x, a, b, idx, row_block=8)
+    out = sgmv_apply(x, a, b, idx, row_block=8, use_kernel=True)
     ref = sgmv_ref(x, a, b, idx)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                atol=1e-4, rtol=1e-4)
@@ -62,7 +63,7 @@ def test_sgmv_tokens_layout():
     a = jax.random.normal(ks[1], (3, 64, 8)) * 0.1
     b = jax.random.normal(ks[2], (3, 8, 32)) * 0.1
     idx = jnp.array([0, 2, 1, 0])
-    out = sgmv_tokens(x, a, b, idx)
+    out = sgmv_tokens(x, a, b, idx, use_kernel=True)
     ref = sgmv_ref(x.reshape(24, 64), a, b,
                    jnp.repeat(idx, 6)).reshape(4, 6, 32)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),

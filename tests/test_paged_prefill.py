@@ -20,7 +20,13 @@ from repro.kernels.paged_prefill.ref import paged_prefill_ref
 from repro.models import transformer as tf
 from repro.models.cache import GARBAGE_BLOCK, init_paged_cache
 from repro.serverless.batching import Request
-from repro.serving import CompileGuard, ContinuousRuntime, ServingConfig
+from repro.serving import (CompileGuard, ContinuousRuntime, ServeRequest,
+                           ServingConfig)
+
+
+def _sr(req, prompt, adapter):
+    return ServeRequest(prompt=prompt, adapter=adapter, request=req)
+
 
 
 # ------------------------------------------------------------- kernel ops
@@ -271,8 +277,8 @@ def test_shared_cover_ending_mid_chunk_bitwise(small_model):
         rt = ContinuousRuntime(cfg, params, scfg)
         reqs = [Request(req_id=i, fn_id="fn0", arrival=0.0, prompt_len=20,
                         output_len=9, slo_ttft=30.0) for i in range(2)]
-        rt.try_admit([(reqs[0], prompt_a, 0)])
-        rb = rt.try_admit([(reqs[1], prompt_b, 0)])
+        rt.try_admit([_sr(reqs[0], prompt_a, 0)])
+        rb = rt.try_admit([_sr(reqs[1], prompt_b, 0)])
         if sharing:
             assert rb.shared_blocks == [1], "cover must be exactly 1 block"
             # cover ends at token 8, mid-way into the 16-token chunk grid
@@ -304,7 +310,7 @@ def test_runtime_prefill_compile_once_across_lengths(small_model):
         for i, L in enumerate((5, 16, 23, 40, 57)):
             req = Request(req_id=i, fn_id="fn0", arrival=0.0, prompt_len=L,
                           output_len=2, slo_ttft=30.0)
-            res = rt.try_admit([(req, rng.integers(0, 512, L,
+            res = rt.try_admit([_sr(req, rng.integers(0, 512, L,
                                                    dtype=np.int32), 0)])
             assert res is not None and res.slot_ids[0] >= 0
             while rt.slots.num_active:

@@ -17,7 +17,13 @@ from repro.core.engine import make_serve_step
 from repro.models import transformer as tf
 from repro.serverless.batching import Request
 from repro.serving import (BlockPool, ContinuousRuntime, PrefixCache,
+                           ServeRequest,
                            ServingConfig)
+
+
+def _sr(req, prompt, adapter):
+    return ServeRequest(prompt=prompt, adapter=adapter, request=req)
+
 
 
 # ------------------------------------------------------------- block pool
@@ -182,12 +188,12 @@ def test_admit_maps_shared_prefix_blocks(small_model):
     rng = np.random.default_rng(3)
     prompt = rng.integers(0, 512, 16, dtype=np.int32)   # 2 full blocks
 
-    r0 = rt.try_admit([(_req(0, 16, 8), prompt, 0)])
+    r0 = rt.try_admit([_sr(_req(0, 16, 8), prompt, 0)])
     sid0 = r0.slot_ids[0]
     blocks0 = list(rt.slots.states[sid0].blocks)
     assert r0.shared_blocks == [0]                      # cold cache
 
-    r1 = rt.try_admit([(_req(1, 16, 8), prompt, 0)])    # overlapping admit
+    r1 = rt.try_admit([_sr(_req(1, 16, 8), prompt, 0)])    # overlapping admit
     st1 = rt.slots.states[r1.slot_ids[0]]
     assert r1.shared_blocks == [2]          # both full prompt blocks map
     #   shared; the 3rd block (first decode write) is always private
@@ -200,7 +206,7 @@ def test_admit_maps_shared_prefix_blocks(small_model):
     assert rt.stats["prefill_tokens"] == 16    # r0 full, r1 fully covered
     assert rt.stats["prompt_tokens"] == 32
 
-    r2 = rt.try_admit([(_req(2, 16, 8), prompt, 1)])    # other adapter
+    r2 = rt.try_admit([_sr(_req(2, 16, 8), prompt, 1)])    # other adapter
     assert r2.shared_blocks == [0]
 
     _drain(rt)
@@ -217,8 +223,8 @@ def test_shared_blocks_survive_first_owner(small_model):
 
     def run(sharing):
         rt = _mk_rt(cfg, params, prefix_sharing=sharing)
-        r0 = rt.try_admit([(_req(0, 16, 5), prompt, 0)])   # finishes early
-        r1 = rt.try_admit([(_req(1, 16, 13), prompt, 0)])  # outlives r0
+        r0 = rt.try_admit([_sr(_req(0, 16, 5), prompt, 0)])   # finishes early
+        r1 = rt.try_admit([_sr(_req(1, 16, 13), prompt, 0)])  # outlives r0
         if sharing:
             assert r1.shared_blocks[0] >= 1
         out = _drain(rt)
@@ -239,9 +245,9 @@ def test_shared_prefix_decode_logits_bitwise(small_model):
 
     def admit_b(sharing):
         rt = _mk_rt(cfg, params, prefix_sharing=sharing)
-        rt.try_admit([(_req(0, 16, 9), prompt, 0)])
+        rt.try_admit([_sr(_req(0, 16, 9), prompt, 0)])
         _drain(rt)                       # A finishes; its blocks park cached
-        rb = rt.try_admit([(_req(1, 16, 9), prompt, 0)])
+        rb = rt.try_admit([_sr(_req(1, 16, 9), prompt, 0)])
         if sharing:
             assert rb.shared_blocks[0] >= 1, "sharing never engaged"
         return rt, rb.slot_ids[0]
@@ -291,7 +297,7 @@ def test_window_reclamation_frees_blocks_logits_bitwise(small_model):
                              decode_chunk=4, prefix_sharing=False,
                              window_reclamation=reclaim)
         rt = ContinuousRuntime(swa, params, scfg)
-        rt.try_admit([(_req(0, 12, 21), prompt, 0)])
+        rt.try_admit([_sr(_req(0, 12, 21), prompt, 0)])
         return rt
 
     rt_rec, rt_keep = mk(True), mk(False)
@@ -344,10 +350,10 @@ def test_window_reclamation_of_shared_blocks_decrements(small_model):
                          max_blocks_per_slot=8, prefill_chunk=16,
                          decode_chunk=4)
     rt = ContinuousRuntime(swa, params, scfg)
-    r0 = rt.try_admit([(_req(0, 8, 20), prompt, 0)])
+    r0 = rt.try_admit([_sr(_req(0, 8, 20), prompt, 0)])
     rt.decode()
     rt.decode()                          # slot 0 runs ahead of the sharer
-    r1 = rt.try_admit([(_req(1, 8, 20), prompt, 0)])
+    r1 = rt.try_admit([_sr(_req(1, 8, 20), prompt, 0)])
     assert r1.shared_blocks[0] >= 1
     _drain(rt)
     assert rt.slots.num_active == 0 and rt.pool.in_use == 0
@@ -368,7 +374,7 @@ def test_intra_group_sharing_runs_dependent_item_after(small_model):
     def run(sharing):
         rt = _mk_rt(cfg, params, prefix_sharing=sharing)
         reqs = [_req(i, 20, 9) for i in range(2)]
-        res = rt.try_admit([(reqs[0], prompt, 0), (reqs[1], prompt, 0)])
+        res = rt.try_admit([_sr(reqs[0], prompt, 0), _sr(reqs[1], prompt, 0)])
         if sharing:
             assert res.shared_blocks == [0, 2], "intra-group share missing"
         out = {sid: [tok] for sid, tok in
@@ -394,12 +400,12 @@ def test_prefix_cache_eviction_under_pool_pressure(small_model):
                          decode_chunk=4)
     rt = ContinuousRuntime(cfg, params, scfg)     # 4 usable blocks: one
     #   request needs 3, so A's cached prefix cannot coexist with B live
-    rt.try_admit([(_req(0, 16, 6), p_a, 0)])
+    rt.try_admit([_sr(_req(0, 16, 6), p_a, 0)])
     _drain(rt)
     assert rt.pool.num_cached == 2
-    rt.try_admit([(_req(1, 16, 6), p_b, 0)])      # evicts A's cached blocks
+    rt.try_admit([_sr(_req(1, 16, 6), p_b, 0)])      # evicts A's cached blocks
     _drain(rt)
-    r2 = rt.try_admit([(_req(2, 16, 6), p_a, 0)])
+    r2 = rt.try_admit([_sr(_req(2, 16, 6), p_a, 0)])
     assert r2.shared_blocks[0] <= 1               # A's chain was evicted
     _drain(rt)
     assert rt.pool.in_use == 0
@@ -410,7 +416,7 @@ def test_runtime_reset_path_raises_with_live_slots(small_model):
     cfg, params = small_model
     rt = _mk_rt(cfg, params)
     rng = np.random.default_rng(23)
-    rt.try_admit([(_req(0, 16, 8), rng.integers(0, 512, 16,
+    rt.try_admit([_sr(_req(0, 16, 8), rng.integers(0, 512, 16,
                                                 dtype=np.int32), 0)])
     with pytest.raises(RuntimeError):
         rt.pool.reset()                  # live slot still maps its blocks

@@ -16,7 +16,13 @@ from repro.models.cache import (GARBAGE_BLOCK, init_paged_cache,
 from repro.serverless.batching import Request
 from repro.serverless.traces import TraceSpec, make_workload
 from repro.serving import (BlockPool, CompileGuard, ContinuousRuntime,
+                           ServeRequest,
                            ServingConfig, blocks_for_tokens, replay_trace)
+
+
+def _sr(req, prompt, adapter):
+    return ServeRequest(prompt=prompt, adapter=adapter, request=req)
+
 
 
 # ------------------------------------------------------------- block pool
@@ -238,13 +244,13 @@ def test_mid_flight_join_and_leave(small_model):
         return Request(req_id=rid, fn_id="fn0", arrival=0.0, prompt_len=12,
                        output_len=out, slo_ttft=10.0)
 
-    r0 = rt.try_admit([(req(0, 12), rng.integers(0, 512, 12,
+    r0 = rt.try_admit([_sr(req(0, 12), rng.integers(0, 512, 12,
                                                  dtype=np.int32), 0)])
     assert r0 is not None and rt.slots.num_active == 1
     first = rt.decode()
     assert first is not None and len(first.emitted[r0.slot_ids[0]]) == 4
     # join mid-decode
-    r1 = rt.try_admit([(req(1, 6), rng.integers(0, 512, 12,
+    r1 = rt.try_admit([_sr(req(1, 6), rng.integers(0, 512, 12,
                                                 dtype=np.int32), 1)])
     assert r1 is not None and rt.slots.num_active == 2
     produced = {0: 1 + 4, 1: 1}
@@ -333,15 +339,15 @@ def test_try_admit_mixed_group_rejects_only_oversized(small_model):
     big = Request(req_id=1, fn_id="fn0", arrival=0.0, prompt_len=80,
                   output_len=6, slo_ttft=10.0)
     res = rt.try_admit([
-        (ok, rng.integers(0, 512, 12, dtype=np.int32), 0),
-        (big, rng.integers(0, 512, 80, dtype=np.int32), 0)])
+        _sr(ok, rng.integers(0, 512, 12, dtype=np.int32), 0),
+        _sr(big, rng.integers(0, 512, 80, dtype=np.int32), 0)])
     assert [r.req_id for r in res.rejected] == [1]
     assert len(res.slot_ids) == 1 and res.slot_ids[0] >= 0
     assert rt.stats["rejected_too_long"] == 1
     rt.reject_too_long(big)              # idempotent: no double count
     assert rt.stats["rejected_too_long"] == 1
     # an all-oversized group admits nothing but still reports the drops
-    res2 = rt.try_admit([(big, rng.integers(0, 512, 80,
+    res2 = rt.try_admit([_sr(big, rng.integers(0, 512, 80,
                                             dtype=np.int32), 0)])
     assert res2.slot_ids == [] and [r.req_id for r in res2.rejected] == [1]
     for _ in range(6):
@@ -361,7 +367,7 @@ def test_prompt_longer_than_chunk_and_any_bucket(small_model):
     req = Request(req_id=0, fn_id="fn0", arrival=0.0, prompt_len=40,
                   output_len=6, slo_ttft=10.0)
     with CompileGuard({"prefill": 1}, runtime=rt):
-        res = rt.try_admit([(req, prompt, 0)])
+        res = rt.try_admit([_sr(req, prompt, 0)])
         assert res is not None and res.slot_ids[0] >= 0
         assert rt.stats["prefill_chunks"] == 3
         produced = 1
@@ -389,7 +395,7 @@ def test_stall_does_not_corrupt_output(small_model):
         rt = ContinuousRuntime(cfg, params, scfg)
         reqs = [Request(req_id=i, fn_id="fn0", arrival=0.0, prompt_len=8,
                         output_len=9, slo_ttft=10.0) for i in range(2)]
-        res = rt.try_admit([(reqs[i], prompts[i], i) for i in range(2)])
+        res = rt.try_admit([_sr(reqs[i], prompts[i], i) for i in range(2)])
         out = {sid: [tok] for sid, tok in
                zip(res.slot_ids, res.first_tokens)}
         stalls = 0
@@ -424,7 +430,7 @@ def test_admit_prefill_finish_reports_unbound_slot(small_model):
     reqs = [Request(req_id=i, fn_id="fn0", arrival=0.0, prompt_len=12,
                     output_len=o, slo_ttft=10.0)
             for i, o in enumerate((1, 6))]
-    res = rt.try_admit([(r, rng.integers(0, 512, 12, dtype=np.int32), 0)
+    res = rt.try_admit([_sr(r, rng.integers(0, 512, 12, dtype=np.int32), 0)
                         for r in reqs])
     assert res.slot_ids[0] == -1          # finished at prefill, unbound
     assert res.slot_ids[1] >= 0           # the live one got a real slot
