@@ -9,13 +9,15 @@ from __future__ import annotations
 import io
 import json
 import os
-from typing import Any, Dict, Optional, Tuple
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lora import partition_lora
+from repro.serving.faults import retry_with_backoff
 
 Params = Dict[str, Any]
 _SEP = "/"
@@ -81,17 +83,36 @@ def save_checkpoint(path: str, params: Params,
     return os.path.getsize(path + ".npz")
 
 
-def load_checkpoint(path: str) -> Tuple[Params, Dict]:
-    with open(path + ".json") as f:
-        info = json.load(f)
-    flat = {}
-    with np.load(path + ".npz") as z:
-        for k in z.files:
-            arr = z[k]
-            if info["dtypes"].get(k) == "bfloat16":
-                arr = arr.view(jnp.bfloat16)
-            flat[k] = arr
-    return _unflatten(flat), info.get("meta", {})
+def load_checkpoint(path: str, *, retries: int = 0, backoff_s: float = 0.0,
+                    sleep: Callable[[float], None] = time.sleep,
+                    fault_hook: Optional[Callable[[str, str], None]] = None,
+                    on_retry: Optional[Callable[[int, BaseException],
+                                                None]] = None
+                    ) -> Tuple[Params, Dict]:
+    """Read a checkpoint, optionally retrying transient load failures.
+
+    ``retries``/``backoff_s``/``sleep`` feed ``faults.retry_with_backoff``
+    (default ``retries=0`` keeps the historical fail-fast behaviour);
+    ``fault_hook(target, name)`` — typically a bound
+    ``FaultPlan.artifact_check`` — may veto each attempt by raising, which
+    is how the chaos harness exercises this path deterministically."""
+
+    def attempt() -> Tuple[Params, Dict]:
+        if fault_hook is not None:
+            fault_hook("checkpoint", path)
+        with open(path + ".json") as f:
+            info = json.load(f)
+        flat = {}
+        with np.load(path + ".npz") as z:
+            for k in z.files:
+                arr = z[k]
+                if info["dtypes"].get(k) == "bfloat16":
+                    arr = arr.view(jnp.bfloat16)
+                flat[k] = arr
+        return _unflatten(flat), info.get("meta", {})
+
+    return retry_with_backoff(attempt, retries=retries, backoff_s=backoff_s,
+                              sleep=sleep, on_retry=on_retry)
 
 
 def checkpoint_manifest(params: Params) -> Dict[str, int]:

@@ -27,6 +27,15 @@ class Request:
     prompt_len: int
     output_len: int
     slo_ttft: float
+    # SLO class + hard deadlines (serving.runtime deadline-aware admission;
+    # the simulator ignores them).  slo_class orders preemption: a HIGHER
+    # class may preempt a lower one; deadlines are absolute budgets from
+    # arrival — inf (the default) disables shedding entirely, so traces
+    # that never set them replay bitwise-identically to before the fields
+    # existed.
+    slo_class: int = 0
+    deadline_ttft: float = float("inf")
+    deadline_e2e: float = float("inf")
     # filled by the simulator
     dispatch: float = -1.0
     first_token: float = -1.0

@@ -38,20 +38,26 @@ from repro.serving.adapters import AdapterRegistry
 from repro.serving.kv_pool import BlockPool, blocks_for_tokens
 from repro.serving.compile_guard import (CompileBudgetExceeded,
                                          CompileGuard)
+from repro.serving.faults import (ArtifactFault, ArtifactLoadError,
+                                  DispatchSlowdown, FaultPlan, PoolSqueeze,
+                                  retry_with_backoff)
 from repro.serving.metrics import MetricsRegistry
 from repro.serving.prefix import PrefixCache
 from repro.serving.runtime import (AdapterConfig, ContinuousRuntime,
                                    DecodeConfig, PrefillConfig,
-                                   ServeRequest, ServingConfig)
+                                   RobustConfig, ServeRequest,
+                                   ServingConfig, terminal_state)
 from repro.serving.replay import replay_requests, replay_trace
 from repro.serving.slots import AdmissionScheduler, SlotTable
 from repro.serving.telemetry import Telemetry, write_metrics_json
 
 __all__ = [
-    "AdapterConfig", "AdapterRegistry", "AdmissionScheduler", "BlockPool",
+    "AdapterConfig", "AdapterRegistry", "AdmissionScheduler",
+    "ArtifactFault", "ArtifactLoadError", "BlockPool",
     "CompileBudgetExceeded", "CompileGuard", "ContinuousRuntime",
-    "DecodeConfig", "MetricsRegistry", "PrefillConfig", "PrefixCache",
+    "DecodeConfig", "DispatchSlowdown", "FaultPlan", "MetricsRegistry",
+    "PoolSqueeze", "PrefillConfig", "PrefixCache", "RobustConfig",
     "ServeRequest", "ServingConfig", "SlotTable", "Telemetry",
     "blocks_for_tokens", "replay_requests", "replay_trace",
-    "write_metrics_json",
+    "retry_with_backoff", "terminal_state", "write_metrics_json",
 ]

@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.lora import combine_lora, partition_lora
+from repro.serving.faults import retry_with_backoff
 
 _IS_NONE = {"is_leaf": lambda x: x is None}
 
@@ -150,6 +151,12 @@ class AdapterRegistry:
         """Live pin count for a loaded adapter (0 = safe to unload)."""
         return self._pins.get(self.slot_of(name), 0)
 
+    def pin_counts(self) -> Dict[int, int]:
+        """Pin count per bank slot — ``runtime.check_invariants`` compares
+        this against the active slots' per-adapter holders to catch pin
+        leaks / double-unpins on any abort/preempt exit path."""
+        return dict(self._pins)
+
     # ---------------------------------------------------------------- pins
     def pin(self, slot: int) -> None:
         self._pins[slot] = self._pins.get(slot, 0) + 1
@@ -178,7 +185,13 @@ class AdapterRegistry:
                 f"adapter bank full ({self.capacity} slots) — unload one "
                 f"first")
         slot = self._free.pop()
-        self._store(slot, adapter_tree)
+        try:
+            self._store_retrying(slot, adapter_tree, name)
+        except BaseException:
+            # rollback: a failed load must leave the registry exactly as
+            # it was — the slot returns to the free list unnamed
+            self._free.append(slot)
+            raise
         self._by_name[name] = slot
         self._names[slot] = name
         self._event("adapter_loads", "adapter:load", name, slot)
@@ -190,7 +203,7 @@ class AdapterRegistry:
         K/V computed under the old weights must not serve the new ones."""
         slot = self.slot_of(name)
         self._check_unpinned(name, slot, "swap")
-        self._store(slot, adapter_tree)
+        self._store_retrying(slot, adapter_tree, name)
         self._purge_prefix(slot)
         self._event("adapter_swaps", "adapter:swap", name, slot)
         return slot
@@ -216,6 +229,28 @@ class AdapterRegistry:
             raise RuntimeError(
                 f"cannot {op} adapter {name!r}: {pins} in-flight "
                 f"request(s) pin bank slot {slot}")
+
+    def _store_retrying(self, slot: int, adapter_tree, name: str) -> None:
+        """``_store`` behind the shared retry primitive.  An attached
+        ``FaultPlan`` (``runtime.faults``) gets to veto each attempt
+        (injected ``ArtifactLoadError``); transient failures are retried
+        ``robust.artifact_retries`` times with exponential backoff and
+        counted in ``artifact_retries``.  The final failure propagates —
+        callers (``load``) roll back their registry state."""
+        rt = self.runtime
+        rcfg = rt.scfg.robust
+
+        def attempt():
+            if rt.faults is not None:
+                rt.faults.artifact_check("adapter", name)
+            self._store(slot, adapter_tree)
+
+        def on_retry(_attempt: int, _exc: BaseException) -> None:
+            rt.stats["artifact_retries"] += 1
+
+        retry_with_backoff(attempt, retries=rcfg.artifact_retries,
+                           backoff_s=rcfg.artifact_backoff_s,
+                           on_retry=on_retry)
 
     def _store(self, slot: int, adapter_tree) -> None:
         rt = self.runtime

@@ -90,6 +90,7 @@ replay results (see docs/observability.md).
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -107,7 +108,8 @@ from repro.serving.kv_pool import BlockPool, blocks_for_tokens
 from repro.serving.metrics import MetricsRegistry
 from repro.serving.prefix import PrefixCache
 from repro.serving.slots import SlotState, SlotTable
-from repro.serving.telemetry import Telemetry, host_bubble_fraction
+from repro.serving.telemetry import (EVT_ABORT, EVT_PREEMPT, Telemetry,
+                                     host_bubble_fraction)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,6 +129,25 @@ class DecodeConfig:
     """The fixed-shape jitted decode loop."""
     chunk: int = 4                   # tokens per jitted decode dispatch
     eos_id: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class RobustConfig:
+    """Overload robustness: preemption, requeue, and artifact-retry policy
+    (docs/robustness.md)."""
+    preemption: bool = False     # pool exhaustion with EVERY slot stalled:
+    #   True = preempt the lowest-priority slot to the cached-LRU tier so
+    #   the caller can requeue it (cheap resume through the prefix cache);
+    #   False (default) = the legacy terminal force-evict (aborted_oom).
+    #   Off by default so existing replays stay bitwise-identical.
+    retry_budget: int = 3        # preemptions one request may absorb before
+    #   the replay declares it terminally abandoned (abandoned_retries)
+    backoff_s: float = 0.05      # virtual-clock requeue delay base; doubles
+    #   with every further preemption of the same request
+    artifact_retries: int = 2    # AdapterRegistry.load/swap retries on
+    #   transient artifact-load failures (faults.retry_with_backoff)
+    artifact_backoff_s: float = 0.0  # host-clock sleep base between
+    #   artifact retries (0 = immediate; tests inject fake sleeps)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,6 +187,7 @@ class ServingConfig:
     prefill: PrefillConfig = PrefillConfig()
     decode: DecodeConfig = DecodeConfig()
     adapters: AdapterConfig = AdapterConfig()
+    robust: RobustConfig = RobustConfig()
 
     # legacy flat kwarg -> (group field, field inside the group)
     _FLAT = {
@@ -176,9 +198,14 @@ class ServingConfig:
         "max_live_adapters": ("adapters", "max_live"),
         "lora_rank": ("adapters", "lora_rank"),
         "sgmv_kernel": ("adapters", "sgmv_kernel"),
+        "preemption": ("robust", "preemption"),
+        "retry_budget": ("robust", "retry_budget"),
+        "retry_backoff_s": ("robust", "backoff_s"),
+        "artifact_retries": ("robust", "artifact_retries"),
+        "artifact_backoff_s": ("robust", "artifact_backoff_s"),
     }
     _GROUPS = {"prefill": PrefillConfig, "decode": DecodeConfig,
-               "adapters": AdapterConfig}
+               "adapters": AdapterConfig, "robust": RobustConfig}
 
     def __init__(self, num_slots: int = 8, block_size: int = 16,
                  num_blocks: int = 64, max_blocks_per_slot: int = 8,
@@ -187,9 +214,10 @@ class ServingConfig:
                  prefill: Optional[PrefillConfig] = None,
                  decode: Optional[DecodeConfig] = None,
                  adapters: Optional[AdapterConfig] = None,
+                 robust: Optional[RobustConfig] = None,
                  **flat: Any):
         groups: Dict[str, Any] = {"prefill": prefill, "decode": decode,
-                                  "adapters": adapters}
+                                  "adapters": adapters, "robust": robust}
         over: Dict[str, Dict[str, Any]] = {g: {} for g in self._GROUPS}
         for k, v in flat.items():
             if k not in self._FLAT:
@@ -212,7 +240,8 @@ class ServingConfig:
                           ("window_reclamation", window_reclamation),
                           ("prefill", groups["prefill"]),
                           ("decode", groups["decode"]),
-                          ("adapters", groups["adapters"])):
+                          ("adapters", groups["adapters"]),
+                          ("robust", groups["robust"])):
             object.__setattr__(self, name, val)
 
     # flat read-through views (the pre-nesting field names)
@@ -253,6 +282,11 @@ class ServeRequest:
     arrival: float = 0.0
     max_new_tokens: int = 1
     request: Optional[Request] = None
+    slo_class: int = 0               # preemption priority: HIGHER classes
+    #   may preempt lower ones when they would provably miss a deadline
+    deadline_ttft: float = float("inf")  # hard first-token budget from
+    #   arrival; inf (default) disables deadline shedding for this request
+    deadline_e2e: float = float("inf")   # hard end-to-end budget
 
     _auto_id = 0                     # class-level: synthesized req_id seq
 
@@ -265,7 +299,9 @@ class ServeRequest:
                 fn_id=str(self.adapter), arrival=self.arrival,
                 prompt_len=len(self.prompt),
                 output_len=max(int(self.max_new_tokens), 1),
-                slo_ttft=float("inf"))
+                slo_ttft=float("inf"), slo_class=int(self.slo_class),
+                deadline_ttft=float(self.deadline_ttft),
+                deadline_e2e=float(self.deadline_e2e))
         return self.request
 
 
@@ -291,6 +327,43 @@ class DecodeResult:
     aborted: List[SlotState]         # force-evicted on pool exhaustion
     stalled: List[int]
     dt: float
+    preempted: List[SlotState] = dataclasses.field(default_factory=list)
+    #   released with completed KV demoted to the cached-LRU tier
+    #   (``RobustConfig.preemption``); the CALLER owns requeue policy —
+    #   replay_trace re-enters them with exponential backoff + retry budget
+
+
+# terminal-state taxonomy: which breakdown flags put a request in which
+# terminal class.  Every request ends in EXACTLY one class (or none while
+# still in flight) — the conservation invariant check_invariants() audits.
+_REJECT_FLAGS = ("rejected_too_long", "rejected_unknown_adapter",
+                 "rejected_deadline")
+_ABORT_FLAGS = ("aborted", "aborted_oom")
+_ABANDON_FLAGS = ("abandoned", "abandoned_retries")
+
+
+def terminal_state(req: Request) -> Optional[str]:
+    """Terminal class of a request record — ``"finished"`` /
+    ``"rejected"`` / ``"aborted"`` / ``"abandoned"`` — or None while
+    unresolved.  ``"preempted"`` is deliberately NOT terminal: a
+    preempted request is still in flight (requeued) until it finishes,
+    exhausts its retry budget (``abandoned_retries``), or is aborted.
+    Raises ValueError if the flags put the request in more than one
+    class at once (a lifecycle accounting bug, never a workload
+    property)."""
+    rejected = any(f in req.breakdown for f in _REJECT_FLAGS)
+    aborted = any(f in req.breakdown for f in _ABORT_FLAGS)
+    abandoned = any(f in req.breakdown for f in _ABANDON_FLAGS)
+    finished = (req.first_token >= 0 and req.done >= 0
+                and not (aborted or abandoned))
+    hit = [name for name, is_hit in (
+        ("rejected", rejected), ("aborted", aborted),
+        ("abandoned", abandoned), ("finished", finished)) if is_hit]
+    if len(hit) > 1:
+        raise ValueError(
+            f"request {req.req_id} is in {len(hit)} terminal states at "
+            f"once: {hit} (breakdown flags {sorted(req.breakdown)})")
+    return hit[0] if hit else None
 
 
 class ContinuousRuntime:
@@ -375,6 +448,28 @@ class ContinuousRuntime:
             ("admit_syncs", "deliberate device syncs during admission "
              "(one whole-batch logit transfer per final prefill "
              "round; the retired per-item loop paid one per prompt)"),
+            # terminal-state + preemption counters (docs/robustness.md):
+            # every request ends in exactly ONE of finished / rejected_* /
+            # aborted / abandoned — check_invariants() audits the books
+            ("rejected_deadline", "requests shed at admission: even the "
+             "optimistic lower bound on remaining work misses their "
+             "TTFT/e2e deadline"),
+            ("aborted", "in-flight requests cancelled (runtime.abort, "
+             "force-evict on pool exhaustion)"),
+            ("abandoned", "requests terminally dropped after admission "
+             "was attempted (SLO lapse in queue, retry budget exhausted)"),
+            ("preemptions", "slots released mid-flight with completed KV "
+             "demoted to the cached-LRU tier for cheap resume"),
+            ("retries", "preempted requests re-entered into the admission "
+             "queue (backoff requeues, not artifact retries)"),
+            ("resume_prefix_hits", "re-admissions of preempted requests "
+             "that recovered demoted blocks through the prefix cache"),
+            ("demoted_blocks", "completed blocks re-indexed into the "
+             "prefix trie at preempt/abort so they park cached, not free"),
+            ("artifact_retries", "adapter/checkpoint load attempts "
+             "retried after a transient artifact failure"),
+            ("injected_pool_squeezes", "FaultPlan pool-squeeze windows "
+             "that actually captured blocks"),
         ):
             self.metrics.counter(name, help_)
         self.stats = self.metrics.counter_view()
@@ -389,6 +484,11 @@ class ContinuousRuntime:
         self.bank_slots: Optional[int] = (
             int(leaves[0].shape[-3]) if leaves else None)
         self.adapters = None         # Optional[AdapterRegistry]
+        # deterministic fault injection (serving.faults.FaultPlan):
+        # replay_trace attaches the active plan here so artifact loaders
+        # (AdapterRegistry, checkpoint.store callers) can consult it; None
+        # (the default) costs one attribute test per load
+        self.faults = None           # Optional[faults.FaultPlan]
         # host-bubble accounting: wall windows of every post-warmup device
         # dispatch (jitted call + result sync).  Always recorded — the
         # bubble fraction is a metric, not a telemetry feature.
@@ -472,6 +572,66 @@ class ContinuousRuntime:
         if "rejected_unknown_adapter" not in req.breakdown:
             self.stats["rejected_unknown_adapter"] += 1
         req.breakdown["rejected_unknown_adapter"] = 1.0
+
+    def reject_deadline(self, req: Request) -> None:
+        """Count a deadline shed once per request (same idempotency
+        contract as the other reject paths).  Shed requests were PROVABLY
+        going to miss: even the optimistic lower bound on their remaining
+        work exceeds the deadline, so admitting them would burn slot time
+        on a guaranteed violation (docs/robustness.md)."""
+        if "rejected_deadline" not in req.breakdown:
+            self.stats["rejected_deadline"] += 1
+        req.breakdown["rejected_deadline"] = 1.0
+
+    # ------------------------------------------------- deadline estimation
+    def _dispatch_floor(self, kind: str) -> Optional[float]:
+        """Optimistic seconds per ``kind`` dispatch: the MINIMUM observed
+        dispatch time (falling back to the warmup gauge before traffic
+        exists), so every deadline bound built on it is a true lower
+        bound — noise can delay real dispatches, never speed them up.
+        None when no timing data exists yet (shedding then stands down:
+        nothing is provable)."""
+        h = self.metrics.histograms.get(f"{kind}_dispatch_s")
+        if h is not None:
+            v = h.min_observed()
+            if v is not None:
+                return v
+        g = self.metrics.gauges.get(f"warmup_{kind}_chunk_s")
+        if g is not None and g.count:
+            return g.last
+        return None
+
+    def _prefill_rounds(self, prompt_len: int, covered_tokens: int) -> int:
+        """Chunk-loop dispatch rounds a prompt needs — the exact loop
+        bound ``_chunk_prefill`` runs (prefix-covered tokens skip rounds;
+        stacks with recurrent state always start at token 0)."""
+        bs, C = self.scfg.block_size, self.scfg.prefill_chunk
+        if self.has_state:
+            start = 0
+        else:
+            start = min((covered_tokens // bs) * bs,
+                        ((prompt_len - 1) // bs) * bs)
+        return max(-(-(prompt_len - start) // C), 1)
+
+    def deadline_floors(self, prompt_len: int, output_len: int,
+                        covered_tokens: int = 0
+                        ) -> Optional[Tuple[float, float]]:
+        """(TTFT floor, e2e floor): optimistic additional seconds to first
+        token / last token if the request dispatched right now.  None when
+        no prefill timing data exists (nothing provable, nothing shed).
+        The decode term is omitted when decode has no floor yet — the
+        bound just gets weaker, never wrong."""
+        tp = self._dispatch_floor("prefill")
+        if tp is None:
+            return None
+        ttft = self._prefill_rounds(prompt_len, covered_tokens) * tp
+        e2e = ttft
+        if output_len > 1:
+            td = self._dispatch_floor("decode")
+            if td is not None:
+                k = max(self.scfg.decode_chunk, 1)
+                e2e += -(-(output_len - 1) // k) * td
+        return ttft, e2e
 
     def _resolve_adapter(self, adapter) -> Optional[int]:
         """Registry name / bank slot -> validated bank slot, or None if the
@@ -660,8 +820,18 @@ class ContinuousRuntime:
             firsts[i] = int(synced[len(starts[i]) - 1][i].argmax())
         return firsts
 
-    def try_admit(self, items: Sequence[Any]) -> Optional[AdmitResult]:
+    def try_admit(self, items: Sequence[Any], *,
+                  now: Optional[float] = None) -> Optional[AdmitResult]:
         """Join ``ServeRequest`` items into free slots.
+
+        ``now`` (virtual-clock seconds) arms deadline shedding: items
+        whose finite ``deadline_ttft``/``deadline_e2e`` provably cannot be
+        met — queue wait so far plus the OPTIMISTIC lower bound on their
+        remaining work (``deadline_floors``) already exceeds the budget —
+        are dropped (``stats["rejected_deadline"]``, breakdown flag,
+        reported via ``AdmitResult.rejected``).  Without ``now``, or for
+        requests with the default infinite deadlines, behaviour is
+        unchanged bit for bit.
 
         Each item names its adapter by registry name (or raw bank slot);
         resolution happens HERE, at the API boundary — the hot path below
@@ -700,6 +870,31 @@ class ContinuousRuntime:
             else:
                 self.reject_too_long(req)
                 rejected.append(req)
+        if now is not None and kept:
+            # deadline shedding — only requests that OPTED IN by setting a
+            # finite deadline are ever considered, and only a provable
+            # miss sheds (lower-bound estimates; no data -> no shedding)
+            shed_checked: List[Tuple[Request, np.ndarray, int]] = []
+            for req, prompt, adapter in kept:
+                d_ttft, d_e2e = req.deadline_ttft, req.deadline_e2e
+                if not (math.isfinite(d_ttft) or math.isfinite(d_e2e)):
+                    shed_checked.append((req, prompt, adapter))
+                    continue
+                cov = (self.prefix.covered_tokens(adapter, prompt)
+                       if self.prefix is not None else 0)
+                floors = self.deadline_floors(
+                    len(prompt), max(req.output_len, 1), cov)
+                if floors is None:
+                    shed_checked.append((req, prompt, adapter))
+                    continue
+                waited = now - req.arrival
+                if waited + floors[0] > d_ttft \
+                        or waited + floors[1] > d_e2e:
+                    self.reject_deadline(req)
+                    rejected.append(req)
+                else:
+                    shed_checked.append((req, prompt, adapter))
+            kept = shed_checked
         if not kept:
             return AdmitResult([], [], [], 0.0, rejected=rejected)
         scfg = self.scfg
@@ -771,12 +966,24 @@ class ContinuousRuntime:
             self.stats["shared_tokens"] += cov
             self.stats["prefill_tokens"] += L - cov
             self.stats["shared_block_maps"] += len(shared)
+            if req.breakdown.get("preempted"):
+                # resume accounting: a preempted request re-admitting —
+                # shared coverage here IS the cheap-resume payoff (its
+                # demoted blocks survived in the cached-LRU tier)
+                if shared:
+                    self.stats["resume_prefix_hits"] += 1
+                req.breakdown["resumed_covered_tokens"] = float(cov)
+                start_tok = 0 if self.has_state \
+                    else min(cov, ((L - 1) // bs) * bs)
+                req.breakdown["resume_recomputed_tokens"] = \
+                    float(L - start_tok)
 
             sid = sids[i]
             st = SlotState(sid=sid, req=req, adapter=adapter, prompt_len=L,
                            budget=max(req.output_len, 1), pos=L,
                            blocks=shared + fresh, last_token=first,
-                           shared=len(shared))
+                           shared=len(shared), prompt_tokens=prompt,
+                           history=[first])
             first_tokens.append(first)
             done = st.budget == 1 or (scfg.eos_id is not None
                                       and first == scfg.eos_id)
@@ -809,15 +1016,157 @@ class ContinuousRuntime:
         if self.adapters is not None:
             self.adapters.unpin(st.adapter)
 
-    def _ensure_blocks(self) -> Tuple[List[int], List[SlotState]]:
-        """On-demand allocation for this chunk's writes; stall on shortage,
-        force-evict one slot if *everyone* stalls (progress guarantee).
-        Attention-free stacks never allocate and never stall."""
-        scfg, aborted = self.scfg, []
+    def _demote_blocks(self, st: SlotState) -> int:
+        """Re-index a dying slot's COMPLETED full blocks in the prefix
+        trie, so the ``pool.free`` that follows parks them in the
+        cached-LRU tier instead of the free list: a re-admission of the
+        same request (preempt-resume, resubmitted force-evict victim)
+        recovers the computed prefix — prompt AND decoded tokens —
+        through the normal ``prefix.match`` and pays only the tail.
+
+        A block is completed when every position in its [j*bs, (j+1)*bs)
+        range was written (j < pos // bs); the chain truncates at the
+        first window-reclaimed entry (-1) because trie chains must be
+        contiguous from block 0.  Token content comes from the slot's own
+        record: prompt_tokens for positions [0, L), history for [L, pos).
+        Returns the number of newly indexed blocks."""
+        if self.prefix is None or st.prompt_tokens is None:
+            return 0
+        bs = self.scfg.block_size
+        n_full = min(st.pos // bs, len(st.blocks))
+        for j in range(n_full):
+            if st.blocks[j] < 0:
+                n_full = j
+                break
+        if n_full <= 0:
+            return 0
+        stream = [int(t) for t in st.prompt_tokens]
+        stream += st.history[: max(st.pos - st.prompt_len, 0)]
+        tokens = stream[: n_full * bs]
+        covered, node = self.prefix.match(st.adapter, tokens)
+        new = self.prefix.register(st.adapter, tokens, st.blocks,
+                                   len(covered), node)
+        self.stats["demoted_blocks"] += len(new)
+        return len(new)
+
+    def _release_slot(self, st: SlotState, *, demote: bool = False) -> None:
+        """THE exit path for every way a bound slot dies — finish, abort,
+        preempt, force-evict: optionally demote completed blocks to the
+        cached-LRU tier, release the held blocks, release the adapter
+        pin.  Pin/block symmetry is audited here once, not per call site
+        (the force-evict path used to unpin a dispatch later than the
+        finish path did)."""
+        if demote:
+            self._demote_blocks(st)
+        self.pool.free(self.slots.release(st.sid))
+        self._unpin(st)
+
+    def _preempt_slot(self, st: SlotState) -> None:
+        """Release a slot preserving its computed prefix (demote-to-
+        cached) and count the preemption.  The request record stays
+        re-admittable: the caller requeues (or abandons) it."""
+        st.req.breakdown["preempted"] = \
+            st.req.breakdown.get("preempted", 0.0) + 1.0
+        self._release_slot(st, demote=True)
+        self.stats["preemptions"] += 1
+
+    def preempt(self, sid: int, *, now: Optional[float] = None
+                ) -> SlotState:
+        """Public preemption of bound slot ``sid`` (deadline-driven
+        scheduling): completed KV demotes to the cached-LRU tier, blocks
+        and adapter pin release, telemetry gets the preempt instant.
+        Requeue policy belongs to the caller — ``replay_trace`` re-enters
+        the request with exponential backoff and a bounded retry budget.
+        Returns the released ``SlotState``."""
+        st = self.slots.states[sid]
+        if st is None:
+            raise KeyError(f"slot {sid} is not bound")
+        self._preempt_slot(st)
+        t = now if now is not None else self._timer()
+        if self.telemetry is not None:
+            self.telemetry.instant(EVT_PREEMPT, f"slot{sid}", t,
+                                   req_id=st.req.req_id,
+                                   produced=st.produced)
+        self._sample_gauges()
+        return st
+
+    def abort(self, request_id: int, *, now: Optional[float] = None
+              ) -> bool:
+        """Cancel an in-flight request by id with full accounting:
+        completed blocks demote to the cached-LRU tier, remaining blocks
+        and the adapter pin release, the abort lands in the ``aborted``
+        counter, the breakdown flag, and a telemetry abort instant.
+        Returns False when no bound slot serves ``request_id`` (a queued
+        request belongs to the scheduler, not the runtime)."""
+        for st in self.slots.active():
+            if st.req.req_id == request_id:
+                self._release_slot(st, demote=True)
+                st.req.breakdown["aborted"] = 1.0
+                self.stats["aborted"] += 1
+                t = now if now is not None else self._timer()
+                if st.req.done < 0:
+                    st.req.done = t
+                if self.telemetry is not None:
+                    self.telemetry.instant(EVT_ABORT, f"slot{st.sid}", t,
+                                           req_id=request_id,
+                                           produced=st.produced)
+                self._sample_gauges()
+                return True
+        return False
+
+    def deadline_preemption_victim(self, req: Request,
+                                   now: float) -> Optional[int]:
+        """Slot id worth preempting so the queued ``req`` can still meet
+        its TTFT deadline, or None.  Conservative on both sides: fires
+        only when even the OPTIMISTIC bound on waiting for a natural slot
+        release (fastest-finishing slot's remaining decode rounds at the
+        decode floor) plus req's own prefill floor already misses the
+        deadline — and only a victim of STRICTLY lower SLO class (equal
+        classes never thrash each other)."""
+        if not self.scfg.robust.preemption:
+            return None
+        if not math.isfinite(req.deadline_ttft):
+            return None
+        if self.slots.free_slots():
+            return None              # a slot is free; plain admission wins
+        tp = self._dispatch_floor("prefill")
+        td = self._dispatch_floor("decode")
+        if tp is None or td is None:
+            return None              # nothing provable without timing data
+        k = max(self.scfg.decode_chunk, 1)
+        waits = [(-(-(s.budget - s.produced) // k)) * td
+                 for s in self.slots.active()]
+        wait_floor = min(waits) if waits else 0.0
+        ttft_floor = self._prefill_rounds(req.prompt_len, 0) * tp
+        if (now - req.arrival) + wait_floor + ttft_floor \
+                <= req.deadline_ttft:
+            return None              # could still make it by waiting
+        cands = [s for s in self.slots.active()
+                 if s.req.slo_class < req.slo_class]
+        if not cands:
+            return None
+        victim = min(cands, key=lambda s: (s.req.slo_class,
+                                           s.budget - s.produced))
+        return victim.sid
+
+    def _ensure_blocks(self) -> Tuple[List[int], List[SlotState],
+                                      List[SlotState]]:
+        """On-demand allocation for this chunk's writes; stall on
+        shortage.  If *everyone* stalls, one slot must die for the system
+        to make progress: with ``RobustConfig.preemption`` the lowest-
+        priority victim is PREEMPTED — completed blocks demote to the
+        cached-LRU tier and the caller requeues the request for cheap
+        resume — otherwise it is force-evicted terminally (legacy
+        ``aborted_oom``; since the demote fix its completed blocks also
+        park cached, so even a resubmitted force-evict victim hits the
+        prefix cache).  Victim choice: lowest SLO class first, then
+        closest to completion (fewest remaining tokens = least wasted
+        work).  Attention-free stacks never allocate and never stall."""
+        scfg, aborted, preempted = self.scfg, [], []
         if not self.needs_kv:
             for s in self.slots.active():
                 s.stalled = False
-            return [], aborted
+            return [], aborted, preempted
         while True:
             stalled = []
             for s in self.slots.active():
@@ -833,12 +1182,19 @@ class ContinuousRuntime:
                 if s.stalled:
                     stalled.append(s)
             if stalled and len(stalled) == self.slots.num_active:
-                victim = min(stalled, key=lambda s: s.budget - s.produced)
-                victim.req.breakdown["aborted_oom"] = 1.0
-                self.pool.free(self.slots.release(victim.sid))
-                aborted.append(victim)
+                victim = min(stalled,
+                             key=lambda s: (s.req.slo_class,
+                                            s.budget - s.produced))
+                if scfg.robust.preemption:
+                    self._preempt_slot(victim)
+                    preempted.append(victim)
+                else:
+                    victim.req.breakdown["aborted_oom"] = 1.0
+                    self.stats["aborted"] += 1
+                    self._release_slot(victim, demote=True)
+                    aborted.append(victim)
                 continue
-            return [s.sid for s in stalled], aborted
+            return [s.sid for s in stalled], aborted, preempted
 
     def decode(self) -> Optional[DecodeResult]:
         """One fixed-shape decode chunk across every slot (inactive rows
@@ -847,15 +1203,14 @@ class ContinuousRuntime:
             return None
         scfg = self.scfg
         t_plan0 = self._timer()
-        stalled, aborted = self._ensure_blocks()
-        for s in aborted:
-            self._unpin(s)
+        stalled, aborted, preempted = self._ensure_blocks()
         # a stall step = one slot riding one chunk with discarded outputs;
         # ReplayEvent already logged these per-slot, the runtime never
         # counted them (the ISSUE-6 counter-asymmetry satellite)
         self.stats["stall_steps"] += len(stalled)
-        if self.slots.num_active == 0:      # everything aborted
-            return DecodeResult({}, [], aborted, stalled, 0.0)
+        if self.slots.num_active == 0:      # everything aborted/preempted
+            return DecodeResult({}, [], aborted, stalled, 0.0,
+                                preempted=preempted)
 
         # Stalled slots run the chunk unmodified from (pending token, pos):
         # every KV position the stalled chunk writes is re-written by the
@@ -899,10 +1254,10 @@ class ContinuousRuntime:
                     accept = accept[: hits[0] + 1]
                     eos_hit = True
             emitted[s.sid] = [int(t) for t in accept]
+            s.history.extend(emitted[s.sid])
             s.produced += len(accept)
             if eos_hit or s.produced >= s.budget:
-                self.pool.free(self.slots.release(s.sid))
-                self._unpin(s)
+                self._release_slot(s)
                 finished.append(s)
             else:
                 s.pos += scfg.decode_chunk
@@ -911,7 +1266,8 @@ class ContinuousRuntime:
                 self.slots.tokens[s.sid] = s.last_token
                 self._reclaim_window(s)
         self._sample_gauges()
-        return DecodeResult(emitted, finished, aborted, stalled, dt)
+        return DecodeResult(emitted, finished, aborted, stalled, dt,
+                            preempted=preempted)
 
     def _reclaim_window(self, s: SlotState) -> None:
         """Release blocks that slid fully out of the sliding window.
@@ -935,6 +1291,86 @@ class ContinuousRuntime:
                 self.stats["reclaimed_blocks"] += len(freed)
 
     # -------------------------------------------------------------- meta
+    def check_invariants(self, requests: Optional[Sequence[Request]] = None,
+                         *, raise_on_error: bool = True) -> Dict[str, Any]:
+        """Audit the runtime's books; the ONE implementation replay,
+        benches, and tests share (``replay_trace`` runs it after every
+        replay).
+
+        Structural checks (always): every block a bound slot maps is live
+        with a refcount covering all its holders and is not simultaneously
+        parked in the cached LRU; adapter pin counts equal the live
+        holders per bank slot (a mismatch is a pin leak on some exit
+        path).
+
+        Terminal-state conservation (with ``requests``): every trace
+        request ends in EXACTLY one of finished / rejected / aborted /
+        abandoned — the per-class totals reconcile with the trace length.
+        Classification is per-request (breakdown flags + timestamps), so
+        the check is valid even when several replays shared one runtime's
+        counters.
+
+        Returns a report dict (``problems``, ``terminal`` class counts,
+        pool/slot occupancy); raises AssertionError listing every
+        violation unless ``raise_on_error=False``."""
+        problems: List[str] = []
+        held: Dict[int, int] = {}
+        for s in self.slots.active():
+            for b in s.blocks:
+                if b >= 0:
+                    held[b] = held.get(b, 0) + 1
+        for b, n in sorted(held.items()):
+            r = self.pool.refcount(b)
+            if r < n:
+                problems.append(
+                    f"block {b}: {n} slot holder(s) but refcount {r}")
+            if self.pool.is_cached(b):
+                problems.append(
+                    f"block {b} parked in the cached LRU while a bound "
+                    f"slot still maps it")
+        if self.adapters is not None:
+            want: Dict[int, int] = {}
+            for s in self.slots.active():
+                want[s.adapter] = want.get(s.adapter, 0) + 1
+            got = self.adapters.pin_counts()
+            if got != want:
+                problems.append(
+                    f"adapter pins {got} != active-slot holders {want} "
+                    f"(pin leak/double-unpin on some exit path)")
+        terminal = {"finished": 0, "rejected": 0, "aborted": 0,
+                    "abandoned": 0, "unresolved": 0}
+        if requests is not None:
+            requests = list(requests)
+            for r in requests:
+                try:
+                    cls = terminal_state(r)
+                except ValueError as e:
+                    problems.append(str(e))
+                    continue
+                terminal[cls if cls is not None else "unresolved"] += 1
+            if terminal["unresolved"]:
+                problems.append(
+                    f"{terminal['unresolved']} request(s) ended the "
+                    f"replay in NO terminal state")
+            resolved = sum(v for k, v in terminal.items()
+                           if k != "unresolved")
+            if resolved + terminal["unresolved"] != len(requests):
+                problems.append(
+                    f"terminal classes sum to {resolved} != trace "
+                    f"length {len(requests)}")
+        report = {
+            "problems": problems,
+            "terminal": terminal,
+            "pool": {"live": self.pool.in_use,
+                     "cached": self.pool.num_cached,
+                     "free": self.pool.num_free},
+            "slots_active": self.slots.num_active,
+        }
+        if problems and raise_on_error:
+            raise AssertionError(
+                "runtime invariant violation(s): " + "; ".join(problems))
+        return report
+
     def warmup(self) -> Dict[str, Any]:
         """Compile the two fixed shapes — ONE chunked-prefill step (for
         every prompt length) and the decode chunk — and measure

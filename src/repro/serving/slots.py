@@ -40,6 +40,15 @@ class SlotState:
     #   cache at admit (refcount bumps, not fresh allocations)
     reclaimed: int = 0           # logical blocks [0, reclaimed) returned to
     #   the pool by sliding-window reclamation
+    prompt_tokens: Optional[np.ndarray] = None  # the admitted prompt ids —
+    #   kept so preempt/abort can re-index COMPLETED blocks (prompt AND
+    #   decoded tokens) into the prefix trie before release, demoting them
+    #   to the cached-LRU tier for cheap resume (host ints only; never
+    #   touches the device)
+    history: List[int] = dataclasses.field(default_factory=list)
+    #   accepted output tokens in order (history[0] = the prefill token);
+    #   token at absolute position prompt_len + i is history[i], which is
+    #   what lets demotion name the token content of decode-written blocks
 
 
 class SlotTable:
@@ -147,6 +156,15 @@ class AdmissionScheduler:
     @property
     def pending(self) -> int:
         return sum(len(q.pending) for q in self._sched.queues.values())
+
+    def pending_requests(self) -> List[Request]:
+        """Every queued request (all functions, queue order) — the replay
+        scans these for the most-urgent finite deadline when deciding
+        whether deadline-driven preemption should fire."""
+        out: List[Request] = []
+        for q in self._sched.queues.values():
+            out.extend(q.pending)
+        return out
 
     def next_timer(self, now: float) -> Optional[float]:
         return self._sched.next_timer(now)

@@ -56,11 +56,14 @@ SPAN_PREFILL = "prefill"
 SPAN_DECODE = "decode"
 SPAN_HOST_PLAN = "host_plan"
 SPAN_DEVICE_EXECUTE = "device_execute"
+SPAN_REQUEUED = "requeued"       # preempt -> re-admission backoff window
 EVT_FINISH = "finish"
 EVT_ABANDON = "abandon"
 EVT_REJECT = "reject"
 EVT_ABORT = "abort"
 EVT_STALL = "stall"
+EVT_PREEMPT = "preempt"          # slot released, KV demoted to cached LRU
+EVT_RESUME = "resume"            # preempted request re-admitted
 TRACK_QUEUE = "queue"
 TRACK_HOST = "host"
 TRACK_HOST_WALL = "host-wall"
