@@ -44,8 +44,8 @@ from repro.models import transformer as tf
 from repro.serverless.batching import BatchingScheduler, BatchProfile, Request
 from repro.serverless.simulator import SimResult
 from repro.serverless.traces import TraceSpec, make_workload
-from repro.serving import (CompileGuard, ContinuousRuntime, ServingConfig,
-                           replay_trace)
+from repro.serving import (CompileGuard, ContinuousRuntime, SamplingParams,
+                           ServingConfig, replay_trace)
 from repro.serving.replay import synth_prompts
 
 PROMPT_LEN = 16
@@ -70,6 +70,28 @@ def bursty_workload(adapters: int, rate: float, duration: float,
         else:
             w["output_len"] = OUTPUT_MIN + (w["req_id"] * 7) % 15
     return wl
+
+
+# mixed-sampling assignment for the parity run: cycle every decode policy
+# across the trace so one fixed decode shape serves all of them at once
+SAMPLING_MIX = (
+    None,                                            # greedy (default path)
+    SamplingParams(temperature=0.8),
+    SamplingParams(temperature=0.9, top_k=40),
+    SamplingParams(temperature=0.7, top_p=0.9),
+    SamplingParams(temperature=1.0, top_k=50, top_p=0.95),
+)
+
+
+def mixed_sampling(workload: List[Dict]) -> Dict[int, SamplingParams]:
+    """req_id -> SamplingParams, cycling SAMPLING_MIX; greedy rows are
+    simply absent from the dict (replay passes sampling=None through)."""
+    out: Dict[int, SamplingParams] = {}
+    for w in workload:
+        sp = SAMPLING_MIX[w["req_id"] % len(SAMPLING_MIX)]
+        if sp is not None:
+            out[w["req_id"]] = sp
+    return out
 
 
 def run_static(cfg, params, workload: List[Dict], *, fixed_batch: int,
@@ -178,8 +200,21 @@ def run(adapters: int = 3, rate: float = 200.0, duration: float = 1.0,
                                seed=seed, prefill_group=4,
                                slo_abandon=False)
 
+    # mixed-sampling parity run: same trace, every decode policy cycled
+    # across requests, still ONE decode + ONE prefill compile — sampling
+    # params ride the dispatch as data, never as shape
+    rt_s = ContinuousRuntime(cfg, params, scfg)
+    guard_s = CompileGuard({"decode": 1, "prefill": 1}, runtime=rt_s)
+    with guard_s:
+        sampled, _ = replay_trace(rt_s, [dict(w) for w in wl],
+                                  {f"fn{a}": a for a in range(adapters)},
+                                  seed=seed, prefill_group=4,
+                                  slo_abandon=False,
+                                  sampling=mixed_sampling(wl))
+    sampled.policy = "continuous-sampled"
+
     rows = {}
-    for res in (static, cont):
+    for res in (static, cont, sampled):
         rows[res.policy] = {
             "served": len([r for r in res.requests if r.first_token >= 0]),
             "tok_per_s": throughput(res),
@@ -197,9 +232,17 @@ def run(adapters: int = 3, rate: float = 200.0, duration: float = 1.0,
 
     speedup = rows["continuous-real"]["tok_per_s"] / \
         max(rows["static-fixed-batch"]["tok_per_s"], 1e-9)
+    parity = rows["continuous-sampled"]["tok_per_s"] / \
+        max(rows["continuous-real"]["tok_per_s"], 1e-9)
+    mode_counters = {k: v for k, v in rt_s.stats.items()
+                     if k.startswith("tokens_mode_") or k == "sampled_tokens"}
     bubble = rt.host_bubble_fraction()
     rows["continuous-real"]["host_bubble_frac"] = bubble
     print(f"\ncontinuous/static throughput: {speedup:.2f}x")
+    print(f"sampled/greedy throughput parity: {parity:.2f}x "
+          f"(mixed temperature/top-k/top-p vs all-greedy, same trace; "
+          f"compile guard: {guard_s.report()})")
+    print(f"sampling mode counters: {mode_counters}")
     print(f"host-bubble fraction: {bubble:.3f} "
           f"(host-plan wall time / wall time between first admit and "
           f"last finish — the async-overlap headroom)")
@@ -230,6 +273,9 @@ def run(adapters: int = 3, rate: float = 200.0, duration: float = 1.0,
     path = record_bench("bench_continuous", {
         "rows": rows,
         "speedup_vs_static": speedup,
+        "sampling_parity_vs_greedy": parity,
+        "sampling_mode_counters": mode_counters,
+        "sampling_compile_guard": guard_s.report(),
         "host_bubble_fraction": bubble,
         "compile_guard": greport,
         "admit_syncs": syncs,

@@ -167,12 +167,20 @@ def bench_serving(rate: float, duration: float, seed: int,
         tbl = jnp.asarray(rt.slots.block_tbl)
         ai = jnp.asarray(rt.slots.adapter)
         srows = jnp.asarray(rt.slots.state_rows(rt.garbage_state_row))
+        # greedy sampling vectors (temp 0 / filters off) — the fused
+        # epilogue is part of the steady-state chunk being timed
+        temp = jnp.asarray(rt.slots.temp)
+        top_k = jnp.asarray(rt.slots.top_k)
+        top_p = jnp.asarray(rt.slots.top_p)
+        seed = jnp.asarray(rt.slots.seed)
+        cnt = jnp.asarray(rt.slots.rng_counter)
         meds = []
         for _ in range(3):
             t0 = time.perf_counter()
             for _ in range(10):
                 toks_, rt.cache = rt._decode(rt.params, tok, rt.cache,
-                                             pos, tbl, ai, srows)
+                                             pos, tbl, ai, srows, temp,
+                                             top_k, top_p, seed, cnt)
             np.asarray(toks_)
             meds.append((time.perf_counter() - t0) / 10)
         t_dec = statistics.median(meds)

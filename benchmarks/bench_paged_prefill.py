@@ -48,6 +48,7 @@ import numpy as np
 
 from repro.configs import get_smoke
 from repro.core.engine import make_insert_fn, make_prefill_step
+from repro.core.sampling import GREEDY
 from repro.models import transformer as tf
 from repro.models.cache import GARBAGE_BLOCK, init_paged_cache
 from repro.serverless.batching import Request
@@ -129,7 +130,8 @@ def bench_ttft(cfg, params, lengths: Sequence[int], buckets: Sequence[int],
         t0 = time.perf_counter()
         for p in prompts:
             # garbage ids + garbage state row: perf-only
-            rt._chunk_prefill([(p, 0, [], 0, rt.garbage_state_row)])
+            rt._chunk_prefill([(p, 0, [], 0, rt.garbage_state_row,
+                                GREEDY, 0)])
         return time.perf_counter() - t0
 
     # cold start: the first request cannot be served before its shape has
@@ -138,7 +140,7 @@ def bench_ttft(cfg, params, lengths: Sequence[int], buckets: Sequence[int],
     with guard:
         t0 = time.perf_counter()
         rt._chunk_prefill([(np.zeros((chunk,), np.int32), 0, [], 0,
-                            rt.garbage_state_row)])
+                            rt.garbage_state_row, GREEDY, 0)])
         warm_chunked = time.perf_counter() - t0
         t0 = time.perf_counter()
         for b in buckets:

@@ -19,8 +19,8 @@ from repro.core.lora import partition_lora
 from repro.models import transformer as tf
 from repro.serverless.traces import TraceSpec, make_workload
 from repro.serving import (AdapterRegistry, ContinuousRuntime,
-                           ServingConfig, Telemetry, replay_trace,
-                           write_metrics_json)
+                           SamplingParams, ServingConfig, Telemetry,
+                           replay_trace, write_metrics_json)
 
 
 def _rand_adapter(params, seed):
@@ -60,6 +60,22 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=16,
                     help="per-function system-prompt tokens shared by "
                          "every request (0 = unique random prompts)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="softmax temperature for every request (0 = "
+                         "greedy argmax, the default). Sampling params "
+                         "ride the dispatch as data, so any mix still "
+                         "compiles the decode step exactly once")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k highest-probability tokens "
+                         "before sampling (0 = no top-k cut)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling: keep the smallest prefix of "
+                         "tokens with cumulative probability >= p "
+                         "(1.0 = no nucleus cut)")
+    ap.add_argument("--sampling-seed", type=int, default=None,
+                    help="base RNG seed for sampled requests; request i "
+                         "draws with seed+i so rows differ. Default: "
+                         "each request seeds from its own req_id")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write a Chrome-trace/Perfetto JSON timeline of "
                          "the replay (open at https://ui.perfetto.dev): "
@@ -115,10 +131,25 @@ def main():
                           w["prompt_len"] - args.shared_prefix,
                           dtype=np.int32)]) for w in wl}
 
+    sampling = None
+    if args.temperature > 0.0:
+        sampling = {
+            w["req_id"]: SamplingParams(
+                temperature=args.temperature, top_k=args.top_k,
+                top_p=args.top_p,
+                seed=(None if args.sampling_seed is None
+                      else args.sampling_seed + w["req_id"]))
+            for w in wl}
+        mode = next(iter(sampling.values())).mode()
+        print(f"sampling: mode={mode} temperature={args.temperature} "
+              f"top_k={args.top_k} top_p={args.top_p} "
+              f"(per-request counter-based RNG: token i of request r "
+              f"depends only on (seed_r, i))")
+
     tele = Telemetry() if args.trace_out else None
     res, events = replay_trace(rt, wl, fn_adapter, seed=args.seed,
                                collect_events=True, prompts=prompts,
-                               telemetry=tele)
+                               telemetry=tele, sampling=sampling)
 
     print(f"\nfirst {args.events} runtime events "
           f"(virtual clock — measured device time):")
@@ -178,6 +209,11 @@ def main():
     print(f"  adapter loads {st['adapter_loads']}, unloads "
           f"{st['adapter_unloads']}, rejected (unknown adapter) "
           f"{st['rejected_unknown_adapter']}")
+    from repro.core.sampling import MODES
+    by_mode = {m: st[f"tokens_mode_{m}"] for m in MODES
+               if st[f"tokens_mode_{m}"]}
+    print(f"sampling: {st['sampled_tokens']} non-greedy tokens; "
+          f"accepted tokens by mode: {by_mode}")
     print(f"decode compiles after warmup: {rt.decode_compiles()}, "
           f"prefill compiles: {rt.prefill_compiles()} "
           f"(fixed shapes -> exactly 1 each)")

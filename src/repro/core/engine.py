@@ -13,6 +13,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.sampling import sample_tokens
 from repro.models import transformer as tf
 from repro.models.config import ATTN, ModelConfig
 
@@ -79,6 +80,26 @@ def make_serve_step(cfg: ModelConfig):
                               lora_kernel=lora_kernel, state_rows=state_rows)
 
     return serve_step
+
+
+def make_sampled_serve_step(cfg: ModelConfig):
+    """``make_serve_step`` + the fused sampling epilogue
+    (``core.sampling.sample_tokens``): one compiled step that takes the
+    per-row temperature/top_k/top_p/seed/counter vectors as DATA beside
+    the adapter-id and state-row vectors and returns the next token
+    directly — no (B, V) logits leave the device on the decode hot path.
+    ``temperature <= 0`` rows emit argmax of the raw logits, bit-equal
+    to the plain serve_step + host argmax they replace."""
+    serve = make_serve_step(cfg)
+
+    def sampled_serve_step(params, token, cache, pos, *, temperature,
+                           top_k, top_p, seed, counter, **kw):
+        logits, cache = serve(params, token, cache, pos, **kw)
+        nxt = sample_tokens(logits, temperature, top_k, top_p, seed,
+                            counter)
+        return nxt, cache
+
+    return sampled_serve_step
 
 
 # ------------------------------------------------------- slot-wise cache ops

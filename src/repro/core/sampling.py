@@ -1,0 +1,164 @@
+"""Per-slot seeded sampling fused into the compiled decode/prefill steps.
+
+Sampling parameters ride the dispatch as **data**, never as shape:
+per-row ``temperature`` / ``top_k`` / ``top_p`` vectors plus counter-based
+PRNG key material — so a batch mixing greedy, temperature, top-k and
+top-p rows runs through the ONE compiled decode shape with zero re-jit
+(the same contract as the adapter-id and ``state_rows`` vectors).
+
+Determinism contract (what makes preempt/resume bitwise-safe):
+
+* Each row's key is ``fold_in(fold_in(PRNGKey(0), seed), counter)`` where
+  ``counter`` == tokens generated so far for that request (the prefill
+  token is counter 0).  The token at output position ``i`` is a pure
+  function of ``(seed, i, logits)`` — no stateful stream to checkpoint.
+* A preempted request resumes by re-running prefill (counter 0, same
+  seed -> same first token) and decoding counters 1..n again, replaying
+  the identical key sequence — the guarantee tests/test_robustness.py
+  asserts token-bitwise.
+
+``temperature <= 0`` rows take the EXACT greedy path: the emitted token
+is ``argmax`` of the *raw* logits (same op, same operand as the
+pre-sampling decode loop), so default-``SamplingParams`` replays are
+token-identical to historical greedy output (golden fixture under
+tests/fixtures/golden/).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# sampling-mode taxonomy — counter names and telemetry args use these
+MODES = ("greedy", "temperature", "top_k", "top_p", "top_kp")
+
+_SEED_MASK = 0x7FFFFFFF          # int32-safe, non-negative
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling policy (the ``ServeRequest.sampling`` field).
+
+    ``temperature <= 0`` (the default) is EXACT greedy — argmax of the
+    raw logits, no RNG consulted.  ``top_k <= 0`` disables the top-k
+    filter; ``top_p >= 1`` disables the nucleus filter; both filters
+    always keep at least the most-likely token."""
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: Optional[int] = None   # None: derived from the request id at
+    #   admission (resolve_seed), so replays of the same trace are
+    #   deterministic without every caller inventing seeds
+
+    def __post_init__(self):
+        if not self.temperature >= 0.0:
+            raise ValueError(f"temperature must be >= 0, "
+                             f"got {self.temperature}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+    def mode(self) -> str:
+        """One of ``MODES`` — the per-mode token-counter key."""
+        if self.greedy:
+            return "greedy"
+        k, p = self.top_k > 0, self.top_p < 1.0
+        if k and p:
+            return "top_kp"
+        if k:
+            return "top_k"
+        if p:
+            return "top_p"
+        return "temperature"
+
+    def resolve_seed(self, req_id: int) -> int:
+        """The int32 seed this request's keys fold in: the explicit seed
+        when given, else the request id (masked non-negative — synthetic
+        ``ServeRequest`` ids are negative)."""
+        s = self.seed if self.seed is not None else int(req_id)
+        return int(s) & _SEED_MASK
+
+
+GREEDY = SamplingParams()
+
+
+def row_keys(seed: jnp.ndarray, counter: jnp.ndarray) -> jnp.ndarray:
+    """(B,) seeds + (B,) counters -> (B, 2) per-row PRNG keys.  Pure
+    counter-based derivation: key(i) never depends on key(i-1), which is
+    what lets a resumed request replay its stream from any position."""
+    base = jax.random.PRNGKey(0)
+
+    def one(s, c):
+        return jax.random.fold_in(jax.random.fold_in(base, s), c)
+
+    return jax.vmap(one)(seed, counter)
+
+
+def keep_mask(sorted_scaled: jnp.ndarray, top_k: jnp.ndarray,
+              top_p: jnp.ndarray) -> jnp.ndarray:
+    """Boolean keep-mask over descending-sorted (temperature-scaled)
+    logits: rank < k_eff AND cumulative mass *before* the rank < p_eff.
+    ``top_k <= 0`` / ``top_p >= 1`` disable their filter; rank 0 always
+    survives both (its before-mass is 0), so the mask is never empty."""
+    V = sorted_scaled.shape[-1]
+    ranks = jnp.arange(V, dtype=jnp.int32)
+    k_eff = jnp.where(top_k <= 0, V, jnp.minimum(top_k, V))
+    mask_k = ranks[None, :] < k_eff[:, None]
+    probs = jax.nn.softmax(sorted_scaled, axis=-1)
+    before = jnp.cumsum(probs, axis=-1) - probs
+    p_eff = jnp.where(top_p >= 1.0, 2.0, top_p).astype(probs.dtype)
+    mask_p = before < p_eff[:, None]
+    return mask_k & mask_p
+
+
+def sample_tokens(logits: jnp.ndarray, temperature: jnp.ndarray,
+                  top_k: jnp.ndarray, top_p: jnp.ndarray,
+                  seed: jnp.ndarray, counter: jnp.ndarray) -> jnp.ndarray:
+    """(B, V) logits + per-row sampling vectors -> (B,) int32 tokens.
+
+    The fused epilogue both compiled steps share.  Rows with
+    ``temperature <= 0`` emit ``argmax`` of the RAW logits (bit-identical
+    to the pre-sampling greedy loop); sampled rows draw categorical over
+    the top-k/top-p-masked temperature-scaled distribution with the
+    row's ``(seed, counter)`` key.  Everything is data — one compiled
+    shape serves any mix of modes."""
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t_safe = jnp.where(temperature > 0.0, temperature, 1.0)
+    scaled = logits.astype(jnp.float32) / t_safe[:, None]
+    order = jnp.argsort(-scaled, axis=-1)            # descending, stable
+    sorted_scaled = jnp.take_along_axis(scaled, order, axis=-1)
+    keep = keep_mask(sorted_scaled, top_k, top_p)
+    masked = jnp.where(keep, sorted_scaled, -jnp.inf)
+    keys = row_keys(seed, counter)
+    pos = jax.vmap(jax.random.categorical)(keys, masked)
+    sampled = jnp.take_along_axis(
+        order, pos[:, None], axis=-1)[:, 0].astype(jnp.int32)
+    return jnp.where(temperature > 0.0, sampled, greedy_tok)
+
+
+def sampling_distribution(logits: jnp.ndarray, temperature: jnp.ndarray,
+                          top_k: jnp.ndarray, top_p: jnp.ndarray
+                          ) -> jnp.ndarray:
+    """The exact per-row categorical distribution ``sample_tokens`` draws
+    from, in ORIGINAL vocab order (greedy rows: one-hot at argmax).
+    Exposed for the property tests — invariants are asserted against the
+    real masking path, not a test-side reimplementation."""
+    V = logits.shape[-1]
+    t_safe = jnp.where(temperature > 0.0, temperature, 1.0)
+    scaled = logits.astype(jnp.float32) / t_safe[:, None]
+    order = jnp.argsort(-scaled, axis=-1)
+    sorted_scaled = jnp.take_along_axis(scaled, order, axis=-1)
+    keep = keep_mask(sorted_scaled, top_k, top_p)
+    masked = jnp.where(keep, sorted_scaled, -jnp.inf)
+    probs_sorted = jax.nn.softmax(masked, axis=-1)
+    unsort = jax.vmap(
+        lambda o, p: jnp.zeros((V,), p.dtype).at[o].set(p))
+    probs = unsort(order, probs_sorted)
+    onehot = jax.nn.one_hot(jnp.argmax(logits, axis=-1), V,
+                            dtype=probs.dtype)
+    return jnp.where((temperature > 0.0)[:, None], probs, onehot)

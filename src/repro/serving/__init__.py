@@ -34,6 +34,7 @@ Layout:
                    dynamic half of ``tools/reprolint``'s RL001;
                    docs/static-analysis.md).
 """
+from repro.core.sampling import SamplingParams
 from repro.serving.adapters import AdapterRegistry
 from repro.serving.kv_pool import BlockPool, blocks_for_tokens
 from repro.serving.compile_guard import (CompileBudgetExceeded,
@@ -57,7 +58,8 @@ __all__ = [
     "CompileBudgetExceeded", "CompileGuard", "ContinuousRuntime",
     "DecodeConfig", "DispatchSlowdown", "FaultPlan", "MetricsRegistry",
     "PoolSqueeze", "PrefillConfig", "PrefixCache", "RobustConfig",
-    "ServeRequest", "ServingConfig", "SlotTable", "Telemetry",
+    "SamplingParams", "ServeRequest", "ServingConfig", "SlotTable",
+    "Telemetry",
     "blocks_for_tokens", "replay_requests", "replay_trace",
     "retry_with_backoff", "terminal_state", "write_metrics_json",
 ]

@@ -17,6 +17,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.sampling import SamplingParams
 from repro.serverless.batching import Request
 from repro.serverless.simulator import SimResult
 from repro.serving import telemetry as tm
@@ -52,7 +53,8 @@ def replay_trace(runtime: ContinuousRuntime, workload: Sequence[Dict],
                  prompts: Optional[Dict[int, np.ndarray]] = None,
                  telemetry: Optional[tm.Telemetry] = None,
                  faults: Optional[FaultPlan] = None,
-                 token_sink: Optional[Dict[int, List[int]]] = None
+                 token_sink: Optional[Dict[int, List[int]]] = None,
+                 sampling: Optional[Dict[int, SamplingParams]] = None
                  ) -> Tuple[SimResult, List[ReplayEvent]]:
     """Feed a ``serverless.traces.make_workload`` stream through the real
     engine.  ``fn_adapter`` maps fn_id -> adapter index in the stacked bank.
@@ -100,6 +102,13 @@ def replay_trace(runtime: ContinuousRuntime, workload: Sequence[Dict],
     * ``token_sink`` (req_id -> accepted token ids, prefill token first)
       collects every survivor's full output sequence — the probe the
       bitwise regression tests compare across runs.
+    * ``sampling`` (req_id -> ``SamplingParams``) attaches per-request
+      sampling policies; unmapped requests decode greedy.  Policies ride
+      the dispatch as per-row data vectors (zero re-jit on mixed modes),
+      keys are counter-based per ``(seed, tokens_generated)``, and a
+      preempted request re-admits with the SAME params/seed — so sampled
+      replays, like greedy ones, are deterministic and preempt/resume
+      stays token-bitwise (docs/serving.md "Sampling").
     * After every replay ``runtime.check_invariants(requests)`` audits
       pool refcounts, adapter pins, and terminal-state conservation
       (every request ends in exactly one of finished / rejected /
@@ -158,6 +167,13 @@ def replay_trace(runtime: ContinuousRuntime, workload: Sequence[Dict],
     def log(kind: str, req_id: int, slot: int = -1, detail: str = "") -> None:
         if collect_events:
             events.append(ReplayEvent(now, kind, req_id, slot, detail))
+
+    def sp_of(req_id: int) -> Optional[SamplingParams]:
+        return sampling.get(req_id) if sampling is not None else None
+
+    def mode_of(req_id: int) -> str:
+        sp = sp_of(req_id)
+        return sp.mode() if sp is not None else "greedy"
 
     def requeue_preempted(st: SlotState, emit_evt: bool) -> None:
         """Preempted slot -> backoff heap (or terminal ``abandoned`` when
@@ -281,7 +297,9 @@ def replay_trace(runtime: ContinuousRuntime, workload: Sequence[Dict],
                               adapter=fn_adapter[r.fn_id],
                               arrival=r.arrival,
                               max_new_tokens=r.output_len,
-                              request=r) for r in batch], now=now)
+                              request=r,
+                              sampling=sp_of(r.req_id))
+                 for r in batch], now=now)
             if res is None and len(batch) > 1:
                 # group doesn't fit the remaining blocks — shrink to one
                 sched.requeue_front(batch[1:])
@@ -291,7 +309,9 @@ def replay_trace(runtime: ContinuousRuntime, workload: Sequence[Dict],
                                   adapter=fn_adapter[batch[0].fn_id],
                                   arrival=batch[0].arrival,
                                   max_new_tokens=batch[0].output_len,
-                                  request=batch[0])], now=now)
+                                  request=batch[0],
+                                  sampling=sp_of(batch[0].req_id))],
+                    now=now)
             if res is None:                  # blocks short: requeue, decode on
                 sched.requeue_front(batch)
                 if runtime.slots.num_active == 0 and runtime.pool.in_use == 0:
@@ -353,7 +373,9 @@ def replay_trace(runtime: ContinuousRuntime, workload: Sequence[Dict],
                                     req_id=r.req_id, shared_blocks=shared)
                     tel.span(tm.SPAN_PREFILL, track, r.dispatch, now,
                              req_id=r.req_id, prompt_len=r.prompt_len,
-                             shared_blocks=shared)
+                             shared_blocks=shared,
+                             **{tm.ARG_SAMPLING_MODE:
+                                mode_of(r.req_id)})
                 if resumed:
                     log("resume", r.req_id, res.slot_ids[i],
                         f"{shared} prefix blocks recovered from cache")
@@ -407,7 +429,8 @@ def replay_trace(runtime: ContinuousRuntime, workload: Sequence[Dict],
                 continue
             if tel is not None:
                 tel.span(tm.SPAN_DECODE, f"slot{sid}", chunk_t0, now,
-                         req_id=req.req_id, tokens=len(toks))
+                         req_id=req.req_id, tokens=len(toks),
+                         **{tm.ARG_SAMPLING_MODE: mode_of(req.req_id)})
             if sid in finishing:
                 # the chunk was (possibly) clipped by budget/EOS, but the
                 # device still ran the full chunk: the last accepted token
@@ -497,6 +520,7 @@ def replay_requests(runtime: ContinuousRuntime,
     workload: List[Dict] = []
     prompts: Dict[int, np.ndarray] = {}
     fn_adapter: Dict[str, object] = {}
+    sampling: Dict[int, SamplingParams] = {}
     for i, sr in enumerate(requests):
         prompt = np.asarray(sr.prompt)
         fn = str(sr.adapter)
@@ -509,9 +533,12 @@ def replay_requests(runtime: ContinuousRuntime,
             deadline_ttft=float(sr.deadline_ttft),
             deadline_e2e=float(sr.deadline_e2e)))
         prompts[i] = prompt
+        if sr.sampling is not None:
+            sampling[i] = sr.sampling
     return replay_trace(runtime, workload, fn_adapter,
                         prefill_group=prefill_group,
                         slo_abandon=slo_abandon,
                         collect_events=collect_events,
                         prompts=prompts, telemetry=telemetry,
-                        faults=faults, token_sink=token_sink)
+                        faults=faults, token_sink=token_sink,
+                        sampling=sampling or None)

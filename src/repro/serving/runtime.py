@@ -99,7 +99,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import make_chunked_prefill_step, make_serve_step
+from repro.core.engine import (make_chunked_prefill_step,
+                               make_sampled_serve_step)
+from repro.core.sampling import (GREEDY, MODES, SamplingParams,
+                                 sample_tokens)
 from repro.models.cache import (GARBAGE_BLOCK, has_slot_state,
                                 init_paged_cache, paging_unsupported_reason)
 from repro.models.config import ATTN, ModelConfig
@@ -287,6 +290,11 @@ class ServeRequest:
     deadline_ttft: float = float("inf")  # hard first-token budget from
     #   arrival; inf (default) disables deadline shedding for this request
     deadline_e2e: float = float("inf")   # hard end-to-end budget
+    sampling: Optional[SamplingParams] = None  # per-request sampling
+    #   policy; None = greedy (``core.sampling.GREEDY``).  Rides the
+    #   dispatch as per-row data vectors — mixing modes in one batch
+    #   never recompiles.  A None seed resolves from the request id at
+    #   admission, so trace replays stay deterministic.
 
     _auto_id = 0                     # class-level: synthesized req_id seq
 
@@ -470,8 +478,18 @@ class ContinuousRuntime:
              "retried after a transient artifact failure"),
             ("injected_pool_squeezes", "FaultPlan pool-squeeze windows "
              "that actually captured blocks"),
+            # fused-sampling counters (docs/serving.md "Sampling"):
+            # every accepted token lands in exactly one tokens_mode_*
+            # bucket; sampled_tokens is the non-greedy total
+            ("sampled_tokens", "accepted tokens drawn through the "
+             "sampling epilogue (temperature > 0; greedy rows never "
+             "consult the RNG)"),
         ):
             self.metrics.counter(name, help_)
+        for m in MODES:
+            self.metrics.counter(
+                f"tokens_mode_{m}", f"accepted tokens emitted by rows in "
+                f"sampling mode {m!r} (core.sampling.SamplingParams.mode)")
         self.stats = self.metrics.counter_view()
         # multi-LoRA: bank capacity N read off the params' stacked lora
         # leaves (adapter axis -3); None = no bank in the tree (backbone
@@ -494,38 +512,54 @@ class ContinuousRuntime:
         # bubble fraction is a metric, not a telemetry feature.
         self._dispatch_windows: List[Tuple[float, float]] = []
 
-        serve = make_serve_step(cfg)
+        sampled_serve = make_sampled_serve_step(cfg)
         chunk_step = make_chunked_prefill_step(cfg)
 
-        def decode_chunk(params, tok, cache, pos, tbl, ai, srows):
+        def decode_chunk(params, tok, cache, pos, tbl, ai, srows,
+                         temp, top_k, top_p, seed, counter):
+            """The fixed-shape decode loop with the fused sampling
+            epilogue: per-row temperature/top_k/top_p/seed vectors ride
+            as DATA (same contract as ``ai``/``srows`` — mixed modes
+            never re-jit), the scan carries the per-row RNG counter and
+            advances it by one per emitted token, so the token at output
+            position i is a pure function of (seed, i, logits) and a
+            resumed request replays the identical key sequence."""
             def body(carry, _):
-                tok, cache, pos = carry
-                logits, cache = serve(params, tok, cache, pos,
-                                      adapter_idx=ai, block_tbl=tbl,
-                                      use_paged_kernel=scfg.use_kernel,
-                                      lora_kernel=scfg.adapters.sgmv_kernel,
-                                      state_rows=srows)
-                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-                return (nxt, cache, pos + 1), nxt
+                tok, cache, pos, cnt = carry
+                nxt, cache = sampled_serve(
+                    params, tok, cache, pos, adapter_idx=ai, block_tbl=tbl,
+                    use_paged_kernel=scfg.use_kernel,
+                    lora_kernel=scfg.adapters.sgmv_kernel,
+                    state_rows=srows, temperature=temp, top_k=top_k,
+                    top_p=top_p, seed=seed, counter=cnt)
+                return (nxt, cache, pos + 1, cnt + 1), nxt
 
-            (_, cache, _), toks = jax.lax.scan(
-                body, (tok, cache, pos), None, length=scfg.decode_chunk)
+            (_, cache, _, _), toks = jax.lax.scan(
+                body, (tok, cache, pos, counter), None,
+                length=scfg.decode_chunk)
             return toks.T, cache                       # (B, K)
 
         def prefill_chunk(params, tokens, start, last_idx, ai, pool_cache,
-                          chunk_ids, tbl, srows):
+                          chunk_ids, tbl, srows, temp, top_k, top_p, seed):
             """ONE slice of the join path: write this chunk's K/V straight
             into pool blocks (REC/SSD layers: advance the slot-state rows
-            named by ``srows``) and sample the logit at ``last_idx`` (the
-            final chunk's logit is the request's first output token).
+            named by ``srows``) and sample the first output token from the
+            logit at ``last_idx`` with RNG counter 0 (only the final
+            chunk's draw is kept — the first token is output position 0).
+            Returning the sampled (G,) tokens instead of (G, V) logits
+            also shrinks the admission D2H transfer to one int per row.
             Admission happens between decode chunks, so its dispatch
             overhead is pure decode stall — and there is exactly one such
             compiled shape for every prompt length."""
-            return chunk_step(params, tokens, start, last_idx, pool_cache,
-                              chunk_ids, tbl, adapter_idx=ai,
-                              use_paged_kernel=scfg.use_kernel,
-                              lora_kernel=scfg.adapters.sgmv_kernel,
-                              state_rows=srows)
+            logits, pool_cache = chunk_step(
+                params, tokens, start, last_idx, pool_cache,
+                chunk_ids, tbl, adapter_idx=ai,
+                use_paged_kernel=scfg.use_kernel,
+                lora_kernel=scfg.adapters.sgmv_kernel,
+                state_rows=srows)
+            first = sample_tokens(logits, temp, top_k, top_p, seed,
+                                  jnp.zeros_like(seed))
+            return first, pool_cache
 
         self._decode = jax.jit(decode_chunk, donate_argnums=(2,))
         self._prefill = jax.jit(prefill_chunk, donate_argnums=(5,))
@@ -655,18 +689,22 @@ class ContinuousRuntime:
         return slot
 
     def _coerce_admit_items(self, items) -> Tuple[
-            List[Tuple[Request, np.ndarray, int]], List[Request]]:
+            List[Tuple[Request, np.ndarray, int, SamplingParams, int]],
+            List[Request]]:
         """Normalize ``try_admit`` input — ``ServeRequest`` objects or the
         deprecated ``(Request, prompt, adapter:int)`` tuples — into
-        resolved ``(Request, prompt, bank_slot)`` triples, rejecting items
-        whose adapter cannot be resolved."""
-        out: List[Tuple[Request, np.ndarray, int]] = []
+        resolved ``(Request, prompt, bank_slot, sampling, seed)`` tuples,
+        rejecting items whose adapter cannot be resolved.  The PRNG seed
+        is resolved HERE, at the API boundary (explicit seed, else the
+        request id) — the hot path only ever sees int32 seeds."""
+        out: List[Tuple[Request, np.ndarray, int, SamplingParams, int]] = []
         rejected: List[Request] = []
         warned = False
         for it in items:
             if isinstance(it, ServeRequest):
                 req, prompt, adapter = it.ensure_request(), it.prompt, \
                     it.adapter
+                sp = it.sampling if it.sampling is not None else GREEDY
             else:
                 if not warned:
                     warnings.warn(
@@ -676,16 +714,18 @@ class ContinuousRuntime:
                         DeprecationWarning, stacklevel=3)
                     warned = True
                 req, prompt, adapter = it
+                sp = GREEDY
             slot = self._resolve_adapter(adapter)
             if slot is None:
                 self.reject_unknown_adapter(req)
                 rejected.append(req)
                 continue
-            out.append((req, np.asarray(prompt), slot))
+            out.append((req, np.asarray(prompt), slot, sp,
+                        sp.resolve_seed(req.req_id)))
         return out, rejected
 
     # ----------------------------------------------------------- admission
-    def _plan_blocks(self, items: Sequence[Tuple[Request, np.ndarray, int]]
+    def _plan_blocks(self, items: Sequence[Tuple]
                      ) -> Optional[Tuple[List[Tuple[List[int], List[int]]],
                                          List[List[int]]]]:
         """Per item, (shared prefix blocks, freshly allocated blocks) —
@@ -698,7 +738,7 @@ class ContinuousRuntime:
         item's fresh allocation cannot be covered."""
         plans: List[Tuple[List[int], List[int]]] = []
         registered: List[List[int]] = []
-        for req, prompt, adapter in items:
+        for req, prompt, adapter, *_ in items:
             need = self.admit_cost_blocks(len(prompt), req.output_len)
             shared: List[int] = []
             node = None
@@ -729,7 +769,8 @@ class ContinuousRuntime:
         return plans, registered
 
     def _chunk_prefill(self, items: Sequence[Tuple[np.ndarray, int,
-                                                   List[int], int, int]]
+                                                   List[int], int, int,
+                                                   SamplingParams, int]]
                        ) -> List[int]:
         """Advance up to ``prefill_rows`` prompts' chunk loops side by side
         against the pool cache, one fixed (prefill_rows, prefill_chunk)
@@ -739,23 +780,31 @@ class ContinuousRuntime:
         out) — each row only reads its own earlier rounds, prior requests'
         blocks, or same-round writes of its own row.
 
-        Each item is (prompt, adapter, blocks, covered_blk, sid); the loop
-        starts at the first prefix-uncovered token (a fully covered prompt
-        still recomputes its last block: the first-token logit needs
-        position L-1's hidden state, which only compute yields).  Stacks
-        with REC/SSD layers always start at token 0 — the recurrent state
-        must integrate every prefix token, so shared blocks skip the WRITE
-        but never the compute — and each round maps dispatch row i to the
-        item's slot-state row ``sid`` (finished/padding rows map to the
-        garbage row; the first chunk reads zero state because it starts at
-        position 0).  Returns the per-item first output tokens, sampled
+        Each item is (prompt, adapter, blocks, covered_blk, sid, sampling,
+        seed); the loop starts at the first prefix-uncovered token (a
+        fully covered prompt still recomputes its last block: the
+        first-token logit needs position L-1's hidden state, which only
+        compute yields).  Stacks with REC/SSD layers always start at
+        token 0 — the recurrent state must integrate every prefix token,
+        so shared blocks skip the WRITE but never the compute — and each
+        round maps dispatch row i to the item's slot-state row ``sid``
+        (finished/padding rows map to the garbage row; the first chunk
+        reads zero state because it starts at position 0).  Returns the
+        per-item first output tokens, sampled in-step (RNG counter 0)
         from each item's final chunk logit."""
         scfg = self.scfg
         bs, C = scfg.block_size, scfg.prefill_chunk
         G, MB = scfg.prefill_rows, scfg.max_blocks_per_slot
         assert 0 < len(items) <= G
         starts: List[List[int]] = []
-        for prompt, _, _, cov, _ in items:
+        # per-row sampling vectors: constant across rounds (non-final
+        # rounds draw and discard; only the final round's draw is kept).
+        # Padding rows keep the greedy defaults — no RNG, no NaN hazard.
+        temp = np.zeros((G,), np.float32)
+        top_k = np.zeros((G,), np.int32)
+        top_p = np.ones((G,), np.float32)
+        seed = np.zeros((G,), np.int32)
+        for i, (prompt, _, _, cov, _, sp, sd) in enumerate(items):
             L = len(prompt)
             if self.has_state:
                 start_tok = 0
@@ -763,11 +812,15 @@ class ContinuousRuntime:
                 start_tok = min(cov * bs, ((L - 1) // bs) * bs)
             starts.append(list(range(start_tok, L, C)))
             self.stats["recomputed_tokens"] += L - start_tok
+            temp[i] = sp.temperature
+            top_k[i] = sp.top_k
+            top_p[i] = sp.top_p
+            seed[i] = sd
         nb_c = C // bs
         firsts = [0] * len(items)
         final_rounds = {len(s) - 1 for s in starts}
-        logits: Dict[int, Any] = {}      # final rounds only: holding every
-        #   round's (G, V) device logits would pin O(chunks) buffers
+        toks_by_round: Dict[int, Any] = {}   # final rounds only: the (G,)
+        #   sampled tokens (the retired path held (G, V) logits here)
         for r in range(max(len(s) for s in starts)):
             tok = np.zeros((G, C), np.int32)
             start = np.zeros((G,), np.int32)
@@ -776,7 +829,8 @@ class ContinuousRuntime:
             ids = np.full((G, nb_c), GARBAGE_BLOCK, np.int32)
             tbl = np.full((G, MB), -1, np.int32)
             srows = np.full((G,), self.garbage_state_row, np.int32)
-            for i, (prompt, adapter, blocks, cov, sid) in enumerate(items):
+            for i, (prompt, adapter, blocks, cov, sid, _, _) \
+                    in enumerate(items):
                 if r >= len(starts[i]):
                     continue             # finished: garbage row
                 c0 = starts[i][r]
@@ -796,28 +850,30 @@ class ContinuousRuntime:
                     # allocated position)
                     if cov <= j < len(blocks):
                         ids[i, jj] = blocks[j]
-            lg, self.cache = self._prefill(
+            first, self.cache = self._prefill(
                 self.params, jnp.asarray(tok), jnp.asarray(start),
                 jnp.asarray(last_idx), jnp.asarray(ai), self.cache,
-                jnp.asarray(ids), jnp.asarray(tbl), jnp.asarray(srows))
+                jnp.asarray(ids), jnp.asarray(tbl), jnp.asarray(srows),
+                jnp.asarray(temp), jnp.asarray(top_k), jnp.asarray(top_p),
+                jnp.asarray(seed))
             if r in final_rounds:
-                if hasattr(lg, "copy_to_host_async"):
+                if hasattr(first, "copy_to_host_async"):
                     # start the D2H transfer now so it overlaps the
                     # remaining prefill rounds instead of stalling at
                     # the sync below
-                    lg.copy_to_host_async()
-                logits[r] = lg
+                    first.copy_to_host_async()
+                toks_by_round[r] = first
             self.stats["prefill_chunks"] += 1
         # One whole-batch transfer per final round, then index on host.
         # The per-item ``np.asarray(logits[r])`` loop this replaces was
         # reprolint's first real RL002 hit: a device sync inside a
         # Python loop, serializing admission against the device.
-        self.stats["admit_syncs"] += len(logits)
+        self.stats["admit_syncs"] += len(toks_by_round)
         synced: Dict[int, np.ndarray] = {
-            r: np.asarray(lg)  # reprolint: sync-point (token emission)
-            for r, lg in logits.items()}
+            r: np.asarray(t)  # reprolint: sync-point (token emission)
+            for r, t in toks_by_round.items()}
         for i in range(len(items)):
-            firsts[i] = int(synced[len(starts[i]) - 1][i].argmax())
+            firsts[i] = int(synced[len(starts[i]) - 1][i])
         return firsts
 
     def try_admit(self, items: Sequence[Any], *,
@@ -863,10 +919,12 @@ class ContinuousRuntime:
         new request gets a private copy filled by its own chunk loop."""
         assert len(items) > 0
         resolved, rejected = self._coerce_admit_items(items)
-        kept: List[Tuple[Request, np.ndarray, int]] = []
-        for req, prompt, adapter in resolved:
+        kept: List[Tuple[Request, np.ndarray, int, SamplingParams, int]] \
+            = []
+        for it in resolved:
+            req, prompt = it[0], it[1]
             if self.fits(len(prompt), max(req.output_len, 1)):
-                kept.append((req, prompt, adapter))
+                kept.append(it)
             else:
                 self.reject_too_long(req)
                 rejected.append(req)
@@ -874,18 +932,20 @@ class ContinuousRuntime:
             # deadline shedding — only requests that OPTED IN by setting a
             # finite deadline are ever considered, and only a provable
             # miss sheds (lower-bound estimates; no data -> no shedding)
-            shed_checked: List[Tuple[Request, np.ndarray, int]] = []
-            for req, prompt, adapter in kept:
+            shed_checked: List[Tuple[Request, np.ndarray, int,
+                                     SamplingParams, int]] = []
+            for it in kept:
+                req, prompt, adapter = it[0], it[1], it[2]
                 d_ttft, d_e2e = req.deadline_ttft, req.deadline_e2e
                 if not (math.isfinite(d_ttft) or math.isfinite(d_e2e)):
-                    shed_checked.append((req, prompt, adapter))
+                    shed_checked.append(it)
                     continue
                 cov = (self.prefix.covered_tokens(adapter, prompt)
                        if self.prefix is not None else 0)
                 floors = self.deadline_floors(
                     len(prompt), max(req.output_len, 1), cov)
                 if floors is None:
-                    shed_checked.append((req, prompt, adapter))
+                    shed_checked.append(it)
                     continue
                 waited = now - req.arrival
                 if waited + floors[0] > d_ttft \
@@ -893,7 +953,7 @@ class ContinuousRuntime:
                     self.reject_deadline(req)
                     rejected.append(req)
                 else:
-                    shed_checked.append((req, prompt, adapter))
+                    shed_checked.append(it)
             kept = shed_checked
         if not kept:
             return AdmitResult([], [], [], 0.0, rejected=rejected)
@@ -944,7 +1004,8 @@ class ContinuousRuntime:
             w0 = self._timer()
             got = self._chunk_prefill(
                 [(kept[i][1], kept[i][2], plans[i][0] + plans[i][1],
-                  len(plans[i][0]), sids[i]) for i in batch_idx])
+                  len(plans[i][0]), sids[i], kept[i][3], kept[i][4])
+                 for i in batch_idx])
             w1 = self._timer()
             total_dt += w1 - w0
             self._dispatch_windows.append((w0, w1))
@@ -957,11 +1018,15 @@ class ContinuousRuntime:
             firsts.update(zip(batch_idx, got))
 
         slot_ids, first_tokens, finished = [], [], []
-        for i, (req, prompt, adapter) in enumerate(kept):
+        for i, (req, prompt, adapter, sp, sd) in enumerate(kept):
             shared, fresh = plans[i]
             L = len(prompt)
             first = firsts[i]
             self.stats["prompt_tokens"] += L
+            # the prefill token is output position 0 — bucket it by mode
+            self.stats[f"tokens_mode_{sp.mode()}"] += 1
+            if not sp.greedy:
+                self.stats["sampled_tokens"] += 1
             cov = len(shared) * bs
             self.stats["shared_tokens"] += cov
             self.stats["prefill_tokens"] += L - cov
@@ -983,7 +1048,7 @@ class ContinuousRuntime:
                            budget=max(req.output_len, 1), pos=L,
                            blocks=shared + fresh, last_token=first,
                            shared=len(shared), prompt_tokens=prompt,
-                           history=[first])
+                           history=[first], sampling=sp, seed=sd)
             first_tokens.append(first)
             done = st.budget == 1 or (scfg.eos_id is not None
                                       and first == scfg.eos_id)
@@ -1225,7 +1290,10 @@ class ContinuousRuntime:
             self.params, jnp.asarray(self.slots.tokens), self.cache,
             jnp.asarray(self.slots.pos), jnp.asarray(self.slots.block_tbl),
             jnp.asarray(self.slots.adapter),
-            jnp.asarray(self.slots.state_rows(self.garbage_state_row)))
+            jnp.asarray(self.slots.state_rows(self.garbage_state_row)),
+            jnp.asarray(self.slots.temp), jnp.asarray(self.slots.top_k),
+            jnp.asarray(self.slots.top_p), jnp.asarray(self.slots.seed),
+            jnp.asarray(self.slots.rng_counter))
         toks = np.asarray(toks)  # reprolint: sync-point — (B, K) token
         #   emission, the serving loop's one deliberate decode sync
         t1 = self._timer()
@@ -1256,6 +1324,10 @@ class ContinuousRuntime:
             emitted[s.sid] = [int(t) for t in accept]
             s.history.extend(emitted[s.sid])
             s.produced += len(accept)
+            mode = s.sampling.mode()
+            self.stats[f"tokens_mode_{mode}"] += len(accept)
+            if mode != "greedy":
+                self.stats["sampled_tokens"] += len(accept)
             if eos_hit or s.produced >= s.budget:
                 self._release_slot(s)
                 finished.append(s)
@@ -1264,6 +1336,11 @@ class ContinuousRuntime:
                 s.last_token = int(accept[-1])
                 self.slots.pos[s.sid] = s.pos
                 self.slots.tokens[s.sid] = s.last_token
+                # RNG counter == tokens generated so far: the next chunk
+                # samples counters [produced, produced + chunk).  Stalled
+                # slots never reach here, so their counters re-dispatch
+                # unchanged — the stall replay draws the same keys.
+                self.slots.rng_counter[s.sid] = s.produced
                 self._reclaim_window(s)
         self._sample_gauges()
         return DecodeResult(emitted, finished, aborted, stalled, dt,
@@ -1391,12 +1468,18 @@ class ContinuousRuntime:
         # untouched, same as the garbage block for K/V)
         g_pre = jnp.full((G,), self.garbage_state_row, jnp.int32)
         g_dec = jnp.full((scfg.num_slots,), self.garbage_state_row, jnp.int32)
+        # warmup rows sample in greedy mode (temp 0 / k off / p off) —
+        # the sampling vectors are data, so this compiles the ONE shape
+        # every later mode mix reuses
+        B = scfg.num_slots
         for rep in range(2):
             t0 = self._timer()
-            lg, self.cache = self._prefill(
+            first, self.cache = self._prefill(
                 self.params, jnp.zeros((G, C), jnp.int32), zeros, zeros,
-                zeros, self.cache, ids, tbl, g_pre)
-            np.asarray(lg)
+                zeros, self.cache, ids, tbl, g_pre,
+                jnp.zeros((G,), jnp.float32), jnp.zeros((G,), jnp.int32),
+                jnp.ones((G,), jnp.float32), jnp.zeros((G,), jnp.int32))
+            np.asarray(first)
             timings["prefill_chunk_s"] = self._timer() - t0
         for rep in range(2):
             t0 = self._timer()
@@ -1404,7 +1487,10 @@ class ContinuousRuntime:
                 self.params, jnp.asarray(self.slots.tokens), self.cache,
                 jnp.asarray(self.slots.pos),
                 jnp.asarray(self.slots.block_tbl),
-                jnp.asarray(self.slots.adapter), g_dec)
+                jnp.asarray(self.slots.adapter), g_dec,
+                jnp.zeros((B,), jnp.float32), jnp.zeros((B,), jnp.int32),
+                jnp.ones((B,), jnp.float32), jnp.zeros((B,), jnp.int32),
+                jnp.zeros((B,), jnp.int32))
             np.asarray(toks)
             timings["decode_chunk_s"] = self._timer() - t0
         for key, val in timings.items():

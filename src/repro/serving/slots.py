@@ -18,6 +18,7 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro.core.sampling import GREEDY, SamplingParams
 from repro.serverless.batching import (BatchingScheduler, BatchProfile,
                                        Request)
 
@@ -49,6 +50,11 @@ class SlotState:
     #   accepted output tokens in order (history[0] = the prefill token);
     #   token at absolute position prompt_len + i is history[i], which is
     #   what lets demotion name the token content of decode-written blocks
+    sampling: SamplingParams = GREEDY   # per-request sampling policy
+    #   (dispatched as per-row data vectors, never a compiled shape)
+    seed: int = 0                # resolved int32 PRNG seed; the RNG
+    #   counter itself is DERIVED (== produced), so preempt/resume
+    #   restores it for free with the slot's history
 
 
 class SlotTable:
@@ -62,6 +68,18 @@ class SlotTable:
         self.pos = np.zeros((num_slots,), np.int32)
         self.adapter = np.zeros((num_slots,), np.int32)
         self.block_tbl = np.full((num_slots, max_blocks), -1, np.int32)
+        # per-row sampling vectors (dispatch DATA, one compiled shape):
+        # inactive rows keep the greedy defaults, so garbage rows always
+        # take the argmax path and never consult the RNG
+        self.temp = np.zeros((num_slots,), np.float32)
+        self.top_k = np.zeros((num_slots,), np.int32)
+        self.top_p = np.ones((num_slots,), np.float32)
+        self.seed = np.zeros((num_slots,), np.int32)
+        self.rng_counter = np.zeros((num_slots,), np.int32)
+        #   == tokens generated so far (SlotState.produced); the decode
+        #   scan samples counters [c, c + chunk) and the accept loop
+        #   re-derives c from produced — stalls (outputs discarded,
+        #   produced unchanged) therefore re-dispatch the same counters
 
     # ------------------------------------------------------------- queries
     def free_slots(self) -> List[int]:
@@ -98,6 +116,11 @@ class SlotTable:
         self.adapter[sid] = state.adapter
         self.block_tbl[sid, :] = -1
         self.block_tbl[sid, : len(state.blocks)] = state.blocks
+        self.temp[sid] = state.sampling.temperature
+        self.top_k[sid] = state.sampling.top_k
+        self.top_p[sid] = state.sampling.top_p
+        self.seed[sid] = state.seed
+        self.rng_counter[sid] = state.produced
 
     def grow(self, sid: int, block_id: int) -> None:
         s = self.states[sid]
@@ -133,6 +156,11 @@ class SlotTable:
         self.pos[sid] = 0
         self.adapter[sid] = 0
         self.block_tbl[sid, :] = -1
+        self.temp[sid] = 0.0
+        self.top_k[sid] = 0
+        self.top_p[sid] = 1.0
+        self.seed[sid] = 0
+        self.rng_counter[sid] = 0
         return [b for b in s.blocks if b >= 0]
 
 

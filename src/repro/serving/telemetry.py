@@ -67,6 +67,10 @@ EVT_RESUME = "resume"            # preempted request re-admitted
 TRACK_QUEUE = "queue"
 TRACK_HOST = "host"
 TRACK_HOST_WALL = "host-wall"
+# span-args keys (docs/observability.md catalogs them): prefill/decode
+# spans carry the request's sampling mode (core.sampling.MODES) so a
+# Perfetto timeline can be filtered by decode policy
+ARG_SAMPLING_MODE = "sampling_mode"
 
 
 @dataclasses.dataclass

@@ -1,0 +1,90 @@
+"""Shared serving-test fixtures and builders.
+
+Five serving test modules (test_serving, test_robustness,
+test_sgmv_serving, test_hybrid_serving, test_telemetry) used to each
+carry their own copy of the tiny-model fixture, the 4-slot runtime
+builder, and the deterministic FakeTimer.  They live here once:
+
+* ``build_model(arch, ...)``      — smoke config + fp32 params with a
+                                    3-adapter LoRA bank (the shape every
+                                    serving test wants).
+* ``llama_model`` / ``rec_model`` / ``ssd_model`` — session-scoped
+  (cfg, params) pairs for the attention, hybrid-REC and pure-SSD smoke
+  stacks.  Session scope is safe: params are immutable pytrees and every
+  test builds its own runtime over them.
+* ``make_runtime(cfg, params, ...)`` — the canonical tiny
+  ``ServingConfig`` (4 slots, 8-token blocks, 32-block pool) with every
+  knob overridable, plus the runtime's injectable ``timer``/``telemetry``.
+* ``FakeTimer``                   — deterministic monotonic clock; two
+  replays taking the same timer-call sequence read the same wall times,
+  which is what makes replays comparable bit for bit.
+
+Tests import the non-fixture helpers directly (``from conftest import
+FakeTimer, make_runtime`` — ``tests/`` is on ``sys.path`` via
+pyproject's ``pythonpath``).
+"""
+import jax
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import transformer as tf
+from repro.serving import ContinuousRuntime, ServingConfig
+
+
+def build_model(arch, *, lora_adapters=3, seed=0, **cfg_kw):
+    """Smoke config (fp32) + init params for ``arch``; returns
+    ``(cfg, params)``."""
+    cfg = get_smoke(arch).with_(dtype="float32", **cfg_kw)
+    params = tf.init_params(jax.random.PRNGKey(seed), cfg,
+                            lora_adapters=lora_adapters)
+    return cfg, params
+
+
+@pytest.fixture(scope="session")
+def llama_model():
+    return build_model("llama2_7b")
+
+
+@pytest.fixture(scope="session")
+def rec_model():
+    return build_model("recurrentgemma_9b")
+
+
+@pytest.fixture(scope="session")
+def ssd_model():
+    return build_model("mamba2_780m")
+
+
+class FakeTimer:
+    """Deterministic monotonic clock: every call advances by ``step``.
+    Two replays that take the SAME timer-call sequence read the SAME
+    wall times — the probe for 'telemetry never touches the clock' and
+    the base of every bitwise replay-vs-replay comparison."""
+
+    def __init__(self, step: float = 1e-4):
+        self.step = step
+        self.calls = 0
+
+    def __call__(self) -> float:
+        self.calls += 1
+        return self.calls * self.step
+
+
+def make_runtime(cfg, params, *, num_slots=4, block_size=8, num_blocks=32,
+                 max_blocks_per_slot=6, prefill_chunk=16, decode_chunk=4,
+                 timer=None, telemetry=None, **scfg_kw):
+    """The canonical tiny serving runtime: 4 slots over a 32-block pool
+    of 8-token blocks.  Every ServingConfig knob is overridable via
+    keyword; ``timer``/``telemetry`` forward to ``ContinuousRuntime``
+    only when given, so the default wall clock stays the default."""
+    scfg = ServingConfig(num_slots=num_slots, block_size=block_size,
+                         num_blocks=num_blocks,
+                         max_blocks_per_slot=max_blocks_per_slot,
+                         prefill_chunk=prefill_chunk,
+                         decode_chunk=decode_chunk, **scfg_kw)
+    kw = {}
+    if timer is not None:
+        kw["timer"] = timer
+    if telemetry is not None:
+        kw["telemetry"] = telemetry
+    return ContinuousRuntime(cfg, params, scfg, **kw)

@@ -10,7 +10,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_smoke
 from repro.core.engine import (make_prefill_step, make_serve_step,
                                make_state_extract_fn, make_state_insert_fn,
                                make_state_reset_fn)
@@ -20,9 +19,9 @@ from repro.models.cache import (has_slot_state, init_paged_cache,
 from repro.models.config import REC, SSD
 from repro.serverless.batching import Request
 from repro.serverless.traces import TraceSpec, make_workload
-from repro.serving import (CompileGuard, ContinuousRuntime, ServeRequest,
-                           ServingConfig,
-                           replay_trace)
+from repro.serving import CompileGuard, ServeRequest, replay_trace
+
+from conftest import build_model, make_runtime
 
 
 def _sr(req, prompt, adapter):
@@ -31,19 +30,7 @@ def _sr(req, prompt, adapter):
 
 NUM_SLOTS, BS, MB = 3, 8, 4
 
-
-@pytest.fixture(scope="module")
-def rec_model():
-    cfg = get_smoke("recurrentgemma_9b").with_(dtype="float32")
-    params = tf.init_params(jax.random.PRNGKey(0), cfg, lora_adapters=3)
-    return cfg, params
-
-
-@pytest.fixture(scope="module")
-def ssd_model():
-    cfg = get_smoke("mamba2_780m").with_(dtype="float32")
-    params = tf.init_params(jax.random.PRNGKey(0), cfg, lora_adapters=3)
-    return cfg, params
+# rec_model / ssd_model fixtures come from conftest (session-scoped)
 
 
 def _req(rid, L, out):
@@ -52,10 +39,9 @@ def _req(rid, L, out):
 
 
 def _mk_rt(cfg, params, **kw):
-    scfg = ServingConfig(num_slots=NUM_SLOTS, block_size=BS, num_blocks=32,
-                         max_blocks_per_slot=MB, prefill_chunk=8,
-                         decode_chunk=2, use_kernel=False, **kw)
-    return ContinuousRuntime(cfg, params, scfg)
+    return make_runtime(cfg, params, num_slots=NUM_SLOTS, block_size=BS,
+                        max_blocks_per_slot=MB, prefill_chunk=8,
+                        decode_chunk=2, use_kernel=False, **kw)
 
 
 def _serving_steps(cfg, params, rt, n):
@@ -178,14 +164,10 @@ def test_hybrid_replay_trace_end_to_end(arch):
     """Serving smoke for the (REC, REC, ATTN) hybrid pattern and the pure
     SSD pattern: bursty 2-adapter traces replay end to end, slots/blocks
     fully reclaimed, decode AND prefill compiled exactly once."""
-    cfg = get_smoke(arch).with_(dtype="float32")
-    params = tf.init_params(jax.random.PRNGKey(0), cfg, lora_adapters=2)
+    cfg, params = build_model(arch, lora_adapters=2)
     assert has_slot_state(cfg)
     for use_kernel in (False, True):
-        scfg = ServingConfig(num_slots=4, block_size=8, num_blocks=32,
-                             max_blocks_per_slot=6, prefill_chunk=16,
-                             decode_chunk=4, use_kernel=use_kernel)
-        rt = ContinuousRuntime(cfg, params, scfg)
+        rt = make_runtime(cfg, params, use_kernel=use_kernel)
         specs = [TraceSpec(f"fn{a}", "bursty", 1.5, 5.0, prompt_len=12,
                            output_len=8, slo_ttft=30.0) for a in range(2)]
         wl = make_workload(specs, seed=11)
@@ -215,11 +197,10 @@ def test_hybrid_stall_does_not_corrupt_output(rec_model):
                for _ in range(2)]
 
     def run(num_blocks):
-        scfg = ServingConfig(num_slots=2, block_size=4,
-                             num_blocks=num_blocks, max_blocks_per_slot=4,
-                             prefill_chunk=8, decode_chunk=4,
-                             use_kernel=False)
-        rt = ContinuousRuntime(cfg, params, scfg)
+        rt = make_runtime(cfg, params, num_slots=2, block_size=4,
+                          num_blocks=num_blocks, max_blocks_per_slot=4,
+                          prefill_chunk=8, decode_chunk=4,
+                          use_kernel=False)
         reqs = [_req(i, 8, 9) for i in range(2)]
         res = rt.try_admit([_sr(reqs[i], prompts[i], i) for i in range(2)])
         out = {sid: [tok] for sid, tok in
@@ -358,8 +339,7 @@ def test_attention_free_stack_not_kv_bounded(ssd_model):
     assert rt.slots.num_active == 0 and rt.pool.in_use == 0
     assert rt.stats["shared_tokens"] == 0
     # hybrid stacks WITH attention keep the block-table capacity gate
-    rec = get_smoke("recurrentgemma_9b").with_(dtype="float32")
-    params_rec = tf.init_params(jax.random.PRNGKey(0), rec, lora_adapters=3)
+    rec, params_rec = build_model("recurrentgemma_9b")
     rt2 = _mk_rt(rec, params_rec)
     assert rt2.needs_kv and not rt2.fits(L, 8)
 

@@ -14,48 +14,23 @@ import numpy as np
 import pytest
 
 from repro.checkpoint.store import load_checkpoint, save_checkpoint
-from repro.configs import get_smoke
 from repro.core.lora import partition_lora
-from repro.models import transformer as tf
 from repro.serverless.batching import Request
 from repro.serverless.traces import TraceSpec, make_workload
 from repro.serving import (AdapterRegistry, ArtifactFault,
-                           ArtifactLoadError, ContinuousRuntime,
-                           DispatchSlowdown, FaultPlan, PoolSqueeze,
-                           RobustConfig, ServeRequest, ServingConfig,
-                           replay_trace, retry_with_backoff, terminal_state)
+                           ArtifactLoadError, DispatchSlowdown, FaultPlan,
+                           PoolSqueeze, RobustConfig, SamplingParams,
+                           ServeRequest, replay_trace, retry_with_backoff,
+                           terminal_state)
+
+from conftest import FakeTimer, make_runtime
 
 BS = 8
 
 
-@pytest.fixture(scope="module")
-def model():
-    cfg = get_smoke("llama2_7b").with_(dtype="float32")
-    params = tf.init_params(jax.random.PRNGKey(0), cfg, lora_adapters=3)
-    return cfg, params
-
-
-class FakeTimer:
-    """Deterministic monotonic clock (same contract as test_telemetry's):
-    identical call sequences read identical wall times, which is what
-    makes two replays comparable bit for bit."""
-
-    def __init__(self, step: float = 1e-4):
-        self.step = step
-        self.calls = 0
-
-    def __call__(self) -> float:
-        self.calls += 1
-        return self.calls * self.step
-
-
 def _mk_rt(cfg, params, *, num_blocks=32, robust=None, timer=None):
-    scfg = ServingConfig(num_slots=4, block_size=BS, num_blocks=num_blocks,
-                         max_blocks_per_slot=6, prefill_chunk=16,
-                         decode_chunk=4,
-                         robust=robust or RobustConfig())
-    kw = {"timer": timer} if timer is not None else {}
-    return ContinuousRuntime(cfg, params, scfg, **kw)
+    return make_runtime(cfg, params, block_size=BS, num_blocks=num_blocks,
+                        robust=robust or RobustConfig(), timer=timer)
 
 
 def _workload(duration=3.0, seed=5, output_len=8, rate=1.5, fns=3):
@@ -126,8 +101,8 @@ def test_terminal_state_classification():
 
 
 # --------------------------------------------- empty plan is a proven no-op
-def test_empty_fault_plan_bitwise_identical(model):
-    cfg, params = model
+def test_empty_fault_plan_bitwise_identical(llama_model):
+    cfg, params = llama_model
 
     def run(faults):
         rt = _mk_rt(cfg, params, timer=FakeTimer())
@@ -149,8 +124,8 @@ def test_empty_fault_plan_bitwise_identical(model):
 
 
 # ------------------------------------------------------- deadline shedding
-def test_deadline_shedding_provable_misses_only(model):
-    cfg, params = model
+def test_deadline_shedding_provable_misses_only(llama_model):
+    cfg, params = llama_model
     rt = _mk_rt(cfg, params, timer=FakeTimer())
     wl, fa = _workload(seed=9)
     # half the trace opts into an impossible TTFT deadline; the other half
@@ -170,8 +145,8 @@ def test_deadline_shedding_provable_misses_only(model):
 
 
 # --------------------------------------------------------- abort account
-def test_abort_releases_everything(model):
-    cfg, params = model
+def test_abort_releases_everything(llama_model):
+    cfg, params = llama_model
     rt = _mk_rt(cfg, params)
     AdapterRegistry(rt, names=["a0", "a1", "a2"])
     rt.warmup()
@@ -195,8 +170,8 @@ def test_abort_releases_everything(model):
 
 
 # --------------------------------------- preempt + cheap resume (bitwise)
-def test_preempt_resume_bitwise_and_strictly_cheaper(model):
-    cfg, params = model
+def test_preempt_resume_bitwise_and_strictly_cheaper(llama_model):
+    cfg, params = llama_model
     robust = RobustConfig(preemption=True)
     prompt = (np.arange(23, dtype=np.int32) * 5 + 1) % cfg.vocab_size
     out = 12
@@ -248,9 +223,71 @@ def test_preempt_resume_bitwise_and_strictly_cheaper(model):
     rt2.check_invariants()
 
 
+def test_preempt_resume_bitwise_with_sampling(llama_model):
+    """The greedy preempt/resume guarantee extended to SAMPLED decode:
+    the RNG counter is derived from tokens-produced (demoted with the
+    slot's history, restored on re-admission), so a resumed request
+    replays the identical key sequence — token-bitwise equal to the
+    uninterrupted sampled run."""
+    cfg, params = llama_model
+    robust = RobustConfig(preemption=True)
+    prompt = (np.arange(23, dtype=np.int32) * 5 + 1) % cfg.vocab_size
+    out = 12
+    sp = SamplingParams(temperature=0.9, top_k=20, seed=42)
+
+    def admit(rt, req):
+        return rt.try_admit([ServeRequest(prompt=prompt, adapter=1,
+                                          max_new_tokens=out, request=req,
+                                          sampling=sp)],
+                            now=0.0)
+
+    def drain(rt, res):
+        toks = list(res.first_tokens)
+        sid = res.slot_ids[0]
+        while rt.slots.states[sid] is not None:
+            toks.extend(rt.decode().emitted.get(sid, []))
+        return toks
+
+    # uninterrupted sampled oracle
+    rt1 = _mk_rt(cfg, params, robust=robust)
+    rt1.warmup()
+    ref = drain(rt1, admit(rt1, Request(req_id=0, fn_id="f", arrival=0.0,
+                                        prompt_len=len(prompt),
+                                        output_len=out, slo_ttft=1e9)))
+    assert len(ref) == out
+    assert len(set(ref)) > 1, "sampled stream degenerate (all one token)"
+
+    # preempt after two chunks, resume through the prefix cache
+    rt2 = _mk_rt(cfg, params, robust=robust)
+    rt2.warmup()
+    req = Request(req_id=0, fn_id="f", arrival=0.0, prompt_len=len(prompt),
+                  output_len=out, slo_ttft=1e9)
+    res = admit(rt2, req)
+    sid = res.slot_ids[0]
+    rt2.decode()
+    rt2.decode()
+    produced_at_preempt = rt2.slots.states[sid].produced
+    assert rt2.slots.rng_counter[sid] == produced_at_preempt
+    st = rt2.preempt(sid, now=1.0)
+    # the counter survives in the demoted SlotState (== produced); the
+    # table mirror resets with the released slot
+    assert st.produced == produced_at_preempt
+    assert rt2.slots.rng_counter[sid] == 0
+
+    res2 = admit(rt2, req)
+    assert res2 is not None
+    assert res2.shared_blocks[0] > 0                # resume hit the cache
+    sid2 = res2.slot_ids[0]
+    # re-bound mirror picks the stream back up at tokens-produced
+    assert rt2.slots.rng_counter[sid2] == rt2.slots.states[sid2].produced
+    assert drain(rt2, res2) == ref, \
+        "resumed sampled stream diverged from the uninterrupted run"
+    rt2.check_invariants()
+
+
 # ------------------------------------- force-evict: one victim, bitwise
-def test_all_stall_force_evict_single_victim_bitwise(model):
-    cfg, params = model
+def test_all_stall_force_evict_single_victim_bitwise(llama_model):
+    cfg, params = llama_model
     wl, fa = _workload(duration=2.0, seed=2, output_len=16, rate=2.0,
                        fns=1)
 
@@ -276,8 +313,8 @@ def test_all_stall_force_evict_single_victim_bitwise(model):
 
 
 # ------------------------------- preemption under overload, retry budget
-def test_preemption_replay_conserves_and_retries(model):
-    cfg, params = model
+def test_preemption_replay_conserves_and_retries(llama_model):
+    cfg, params = llama_model
     wl, fa = _workload(duration=2.0, seed=2, output_len=16, rate=2.0,
                        fns=1)
     robust = RobustConfig(preemption=True, retry_budget=2, backoff_s=0.01)
@@ -298,8 +335,8 @@ def test_preemption_replay_conserves_and_retries(model):
 
 
 # ----------------------------------------------- fault plan: pool + time
-def test_pool_squeeze_and_slowdown_inject_deterministically(model):
-    cfg, params = model
+def test_pool_squeeze_and_slowdown_inject_deterministically(llama_model):
+    cfg, params = llama_model
     wl, fa = _workload(duration=2.0, seed=4)
 
     def run(faults):
@@ -324,8 +361,8 @@ def test_pool_squeeze_and_slowdown_inject_deterministically(model):
 
 
 # --------------------------------------------- artifact faults + retries
-def test_adapter_load_retries_then_rolls_back(model):
-    cfg, params = model
+def test_adapter_load_retries_then_rolls_back(llama_model):
+    cfg, params = llama_model
     rt = _mk_rt(cfg, params)          # robust.artifact_retries = 2
     reg = AdapterRegistry(rt, names=["a0"])
     tree = _rand_adapter(params, 1)
@@ -346,8 +383,8 @@ def test_adapter_load_retries_then_rolls_back(model):
     assert "recovered" in reg.names()
 
 
-def test_checkpoint_load_retries_through_fault_hook(model, tmp_path):
-    cfg, params = model
+def test_checkpoint_load_retries_through_fault_hook(llama_model, tmp_path):
+    cfg, params = llama_model
     path = str(tmp_path / "ckpt")
     save_checkpoint(path, {"w": np.arange(4, dtype=np.float32)},
                     meta={"k": 1})
@@ -365,8 +402,8 @@ def test_checkpoint_load_retries_through_fault_hook(model, tmp_path):
 
 
 # ----------------------------------------------------- invariant auditor
-def test_check_invariants_detects_pin_leak(model):
-    cfg, params = model
+def test_check_invariants_detects_pin_leak(llama_model):
+    cfg, params = llama_model
     rt = _mk_rt(cfg, params)
     reg = AdapterRegistry(rt, names=["a0", "a1", "a2"])
     rt.warmup()

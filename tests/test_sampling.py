@@ -1,0 +1,305 @@
+"""Fused per-slot sampling (ISSUE 10): SamplingParams semantics, top-k /
+top-p mask invariants against the REAL compiled epilogue (property-based
+when hypothesis is installed, deterministic parametrized cases always),
+the compile-once contract (sampling params are data, not shape), replay
+determinism, the golden greedy regression (default ``SamplingParams``
+reproduces the pre-sampling decode bit for bit), and a mixed-mode replay
+under ``CompileGuard``."""
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sampling import (GREEDY, MODES, SamplingParams, keep_mask,
+                                 sample_tokens, sampling_distribution)
+from repro.serving import CompileGuard, replay_trace
+
+from _hypothesis_compat import given, settings, st
+from conftest import FakeTimer, make_runtime
+
+# benchmarks/ is a plain directory beside src/, importable from the repo
+# root (the golden fixture pins bench_continuous's exact trace shape)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "fixtures", "golden",
+                      "bench_continuous_greedy.json")
+
+
+# ------------------------------------------------------- params semantics
+def test_sampling_params_validation_and_modes():
+    assert GREEDY.greedy and GREEDY.mode() == "greedy"
+    assert SamplingParams(temperature=0.7).mode() == "temperature"
+    assert SamplingParams(temperature=0.7, top_k=5).mode() == "top_k"
+    assert SamplingParams(temperature=0.7, top_p=0.9).mode() == "top_p"
+    assert SamplingParams(temperature=0.7, top_k=5,
+                          top_p=0.9).mode() == "top_kp"
+    # top_k/top_p with temperature 0 stays greedy: no RNG is consulted
+    assert SamplingParams(top_k=5, top_p=0.9).mode() == "greedy"
+    assert set(sp.mode() for sp in (
+        GREEDY, SamplingParams(temperature=1.0),
+        SamplingParams(temperature=1.0, top_k=1),
+        SamplingParams(temperature=1.0, top_p=0.5),
+        SamplingParams(temperature=1.0, top_k=1, top_p=0.5))) == set(MODES)
+    with pytest.raises(ValueError, match="temperature"):
+        SamplingParams(temperature=-0.1)
+    for bad_p in (0.0, -0.5, 1.5):
+        with pytest.raises(ValueError, match="top_p"):
+            SamplingParams(top_p=bad_p)
+
+
+def test_resolve_seed_explicit_and_derived():
+    assert SamplingParams(seed=42).resolve_seed(7) == 42
+    assert SamplingParams().resolve_seed(7) == 7
+    # synthetic ServeRequest ids are negative: masked non-negative, stable
+    s = SamplingParams().resolve_seed(-3)
+    assert 0 <= s < 2 ** 31
+    assert SamplingParams().resolve_seed(-3) == s
+
+
+# ------------------------------------------------- mask/distribution laws
+def _rand_logits(rng, B, V):
+    return jnp.asarray(rng.normal(size=(B, V)).astype(np.float32) * 3.0)
+
+
+def _check_invariants(logits, temperature, top_k, top_p):
+    """The four mask invariants, asserted against the real epilogue's
+    distribution (original vocab order), not a reimplementation."""
+    B, V = logits.shape
+    t = jnp.full((B,), temperature, jnp.float32)
+    k = jnp.full((B,), top_k, jnp.int32)
+    p = jnp.full((B,), top_p, jnp.float32)
+    probs = np.asarray(sampling_distribution(logits, t, k, p))
+    kept = probs > 0.0
+    # (1) kept set is never empty and respects top_k
+    assert (kept.sum(-1) >= 1).all()
+    if temperature > 0.0 and top_k > 0:
+        assert (kept.sum(-1) <= top_k).all()
+    # (2) renormalized distribution sums to 1
+    np.testing.assert_allclose(probs.sum(-1), 1.0, atol=1e-5)
+    # (3) nucleus: the kept set's ORIGINAL mass covers p (smallest prefix
+    #     of the sorted distribution with cumulative mass >= p), unless
+    #     top_k cut it shorter
+    if temperature > 0.0 and top_k <= 0 and top_p < 1.0:
+        base = np.asarray(jax.nn.softmax(
+            logits.astype(jnp.float32) / temperature, axis=-1))
+        assert ((base * kept).sum(-1) >= top_p - 1e-6).all()
+    # (4) greedy rows are one-hot at argmax of the raw logits
+    if temperature <= 0.0:
+        assert (probs.argmax(-1) == np.asarray(logits).argmax(-1)).all()
+        np.testing.assert_allclose(probs.max(-1), 1.0, atol=1e-6)
+
+
+@pytest.mark.parametrize("temperature,top_k,top_p", [
+    (0.0, 0, 1.0),          # greedy default
+    (0.0, 5, 0.5),          # filters configured but greedy wins
+    (1.0, 0, 1.0),          # pure temperature
+    (0.3, 0, 1.0),          # sharp temperature
+    (1.0, 1, 1.0),          # top-k = 1 (degenerate argmax-by-sampling)
+    (1.0, 7, 1.0),
+    (1.0, 0, 0.1),          # tight nucleus
+    (1.0, 0, 0.9),
+    (0.8, 3, 0.6),          # both filters
+    (2.5, 64, 0.999),       # k > V disables; p ~ 1
+])
+def test_mask_invariants_deterministic(temperature, top_k, top_p):
+    rng = np.random.default_rng(0)
+    _check_invariants(_rand_logits(rng, 5, 32), temperature, top_k, top_p)
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 2 ** 16),
+       temperature=st.floats(0.05, 4.0),
+       top_k=st.integers(0, 40),
+       top_p=st.floats(0.01, 1.0))
+def test_mask_invariants_property(seed, temperature, top_k, top_p):
+    rng = np.random.default_rng(seed)
+    _check_invariants(_rand_logits(rng, 3, 24), temperature, top_k, top_p)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_temperature_to_zero_approaches_argmax(seed):
+    """As temperature -> 0 the sampled distribution collapses onto argmax,
+    and temperature == 0 IS argmax (exact greedy, not a limit)."""
+    rng = np.random.default_rng(seed)
+    logits = _rand_logits(rng, 4, 16)
+    am = np.asarray(logits).argmax(-1)
+    for temperature in (0.05, 0.01):
+        t = jnp.full((4,), temperature, jnp.float32)
+        probs = np.asarray(sampling_distribution(
+            logits, t, jnp.zeros((4,), jnp.int32), jnp.ones((4,))))
+        assert (probs.argmax(-1) == am).all()
+    toks = sample_tokens(logits, jnp.zeros((4,)),
+                         jnp.zeros((4,), jnp.int32), jnp.ones((4,)),
+                         jnp.arange(4, dtype=jnp.int32),
+                         jnp.zeros((4,), jnp.int32))
+    assert (np.asarray(toks) == am).all()
+
+
+def test_keep_mask_rank0_always_survives():
+    """Rank 0 has zero before-mass: even top_p -> 0+ and top_k = 1 keep
+    exactly the most-likely token."""
+    sorted_scaled = jnp.asarray([[3.0, 1.0, 0.0, -1.0]])
+    m = np.asarray(keep_mask(sorted_scaled, jnp.array([1], jnp.int32),
+                             jnp.array([0.01], jnp.float32)))
+    assert m.tolist() == [[True, False, False, False]]
+
+
+# ------------------------------------------------ compiled-epilogue laws
+def test_sample_tokens_compiles_once_across_modes():
+    """Every sampling knob is DATA: one jit cache entry serves any mix of
+    greedy/temperature/top-k/top-p rows and any seed/counter values."""
+    fn = jax.jit(sample_tokens)
+    rng = np.random.default_rng(1)
+    logits = _rand_logits(rng, 4, 32)
+    mixes = [
+        (0.0, 0, 1.0), (0.9, 0, 1.0), (0.9, 5, 1.0), (0.9, 0, 0.8),
+        (0.9, 5, 0.8),
+    ]
+    for i, (t, k, p) in enumerate(mixes):
+        fn(logits, jnp.full((4,), t, jnp.float32),
+           jnp.full((4,), k, jnp.int32), jnp.full((4,), p, jnp.float32),
+           jnp.full((4,), i, jnp.int32),
+           jnp.full((4,), i * 3, jnp.int32)).block_until_ready()
+    assert fn._cache_size() == 1
+
+
+def test_sample_tokens_row_independent_and_deterministic():
+    """Token i is a pure function of (row logits, row params, seed,
+    counter): permuting the batch permutes the output, and identical
+    (seed, counter) pairs redraw identical tokens."""
+    rng = np.random.default_rng(2)
+    logits = _rand_logits(rng, 6, 48)
+    t = jnp.asarray([0.0, 0.9, 0.9, 0.7, 1.2, 0.0], jnp.float32)
+    k = jnp.asarray([0, 0, 10, 0, 4, 3], jnp.int32)
+    p = jnp.asarray([1.0, 1.0, 1.0, 0.8, 0.9, 1.0], jnp.float32)
+    seed = jnp.arange(6, dtype=jnp.int32) * 17
+    cnt = jnp.asarray([0, 1, 2, 3, 4, 5], jnp.int32)
+    out = np.asarray(sample_tokens(logits, t, k, p, seed, cnt))
+    again = np.asarray(sample_tokens(logits, t, k, p, seed, cnt))
+    np.testing.assert_array_equal(out, again)
+    perm = np.asarray([3, 0, 5, 1, 4, 2])
+    out_p = np.asarray(sample_tokens(
+        logits[perm], t[perm], k[perm], p[perm], seed[perm], cnt[perm]))
+    np.testing.assert_array_equal(out_p, out[perm])
+    # sampled tokens always come from the kept set
+    probs = np.asarray(sampling_distribution(logits, t, k, p))
+    for i in range(6):
+        assert probs[i, out[i]] > 0.0
+
+
+def test_counter_advances_the_stream():
+    """Same seed, different counters must not replay one token forever
+    (over 32 counters on near-uniform logits, at least two distinct)."""
+    rng = np.random.default_rng(3)
+    logits = jnp.tile(_rand_logits(rng, 1, 64) * 0.1, (32, 1))
+    t = jnp.full((32,), 1.0, jnp.float32)
+    toks = np.asarray(sample_tokens(
+        logits, t, jnp.zeros((32,), jnp.int32), jnp.ones((32,)),
+        jnp.full((32,), 5, jnp.int32), jnp.arange(32, dtype=jnp.int32)))
+    assert len(set(toks.tolist())) > 1
+
+
+# --------------------------------------------------- replay-level checks
+def _golden_replay(llama_model, sampling):
+    """The exact bench_continuous quick trace the golden fixture pins."""
+    from benchmarks.bench_continuous import bursty_workload
+    cfg, params = llama_model
+    ref = json.load(open(GOLDEN))
+    setup = ref["setup"]
+    wl = bursty_workload(3, setup["rate"], setup["duration"], setup["seed"])
+    rt = make_runtime(cfg, params, num_blocks=128, max_blocks_per_slot=8,
+                      decode_chunk=8, timer=FakeTimer())
+    sink = {}
+    replay_trace(rt, [dict(w) for w in wl], {f"fn{a}": a for a in range(3)},
+                 seed=setup["seed"], prefill_group=4, slo_abandon=False,
+                 token_sink=sink, sampling=sampling)
+    return ref, sink
+
+
+def _digests(sink):
+    per_req = {str(rid): hashlib.sha256(
+                   ",".join(str(t) for t in toks).encode()).hexdigest()
+               for rid, toks in sorted(sink.items())}
+    overall = hashlib.sha256(
+        "|".join(f"{k}:{v}" for k, v in sorted(per_req.items(),
+                                               key=lambda kv: int(kv[0])))
+        .encode()).hexdigest()
+    return per_req, overall
+
+
+@pytest.mark.parametrize("explicit_default", [None, "explicit"])
+def test_golden_greedy_digest_unchanged(llama_model, explicit_default):
+    """THE regression gate: with default SamplingParams (absent or
+    explicitly attached) the fused epilogue reproduces the pre-sampling
+    greedy token streams bit for bit (fixture generated on pre-PR main)."""
+    sampling = None
+    if explicit_default == "explicit":
+        sampling = {rid: GREEDY for rid in range(40)}
+    ref, sink = _golden_replay(llama_model, sampling)
+    assert len(sink) == ref["served"]
+    per_req, overall = _digests(sink)
+    assert sum(len(t) for t in sink.values()) == ref["total_tokens"]
+    assert per_req == ref["per_request_sha256"]
+    assert overall == ref["overall_sha256"]
+
+
+def test_mixed_sampling_replay_compiles_once_and_is_deterministic(
+        llama_model):
+    """Mixed greedy/temperature/top-k/top-p/top-kp replay: ONE decode and
+    ONE prefill compile (CompileGuard-enforced), bit-identical across two
+    fresh runtimes, greedy rows bit-identical to an all-greedy replay,
+    sampled rows actually diverging, mode counters covering every token."""
+    cfg, params = llama_model
+    from repro.serverless.traces import TraceSpec, make_workload
+    specs = [TraceSpec(f"fn{i}", "bursty", 1.5, 3.0, prompt_len=12,
+                       output_len=8, slo_ttft=1e9) for i in range(2)]
+    wl = make_workload(specs, seed=13)
+    assert len(wl) >= 5
+    sampling = {}
+    mix = (None, SamplingParams(temperature=0.8),
+           SamplingParams(temperature=0.9, top_k=8),
+           SamplingParams(temperature=0.7, top_p=0.9),
+           SamplingParams(temperature=1.0, top_k=12, top_p=0.95))
+    for w in wl:
+        sp = mix[w["req_id"] % len(mix)]
+        if sp is not None:
+            sampling[w["req_id"]] = sp
+
+    def run(sampling_map):
+        rt = make_runtime(cfg, params, timer=FakeTimer())
+        sink = {}
+        with CompileGuard({"decode": 1, "prefill": 1}, runtime=rt):
+            replay_trace(rt, [dict(w) for w in wl],
+                         {f"fn{i}": i for i in range(2)}, seed=13,
+                         slo_abandon=False, token_sink=sink,
+                         sampling=sampling_map)
+        assert rt.slots.num_active == 0 and rt.pool.in_use == 0
+        return rt, sink
+
+    rt1, s1 = run(sampling)
+    _, s2 = run(sampling)
+    assert s1 == s2, "mixed-sampling replay is not deterministic"
+    _, greedy_sink = run(None)
+    assert set(s1) == set(greedy_sink)
+    diverged = 0
+    for rid in s1:
+        if rid not in sampling:
+            assert s1[rid] == greedy_sink[rid], \
+                f"greedy req {rid} perturbed by sampled neighbours"
+        elif s1[rid] != greedy_sink[rid]:
+            diverged += 1
+    assert diverged > 0, "no sampled request diverged from greedy"
+    # counter audit: every emitted token lands in exactly one mode bucket
+    total = sum(len(t) for t in s1.values())
+    by_mode = {m: rt1.stats[f"tokens_mode_{m}"] for m in MODES}
+    assert sum(by_mode.values()) == total
+    assert rt1.stats["sampled_tokens"] == \
+        total - by_mode["greedy"]
+    expected_modes = {"greedy"} | {sp.mode() for sp in sampling.values()}
+    assert {m for m, v in by_mode.items() if v > 0} == expected_modes

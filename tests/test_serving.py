@@ -15,9 +15,10 @@ from repro.models.cache import (GARBAGE_BLOCK, init_paged_cache,
                                 paging_unsupported_reason)
 from repro.serverless.batching import Request
 from repro.serverless.traces import TraceSpec, make_workload
-from repro.serving import (BlockPool, CompileGuard, ContinuousRuntime,
-                           ServeRequest,
-                           ServingConfig, blocks_for_tokens, replay_trace)
+from repro.serving import (BlockPool, CompileGuard, ServeRequest,
+                           blocks_for_tokens, replay_trace)
+
+from conftest import make_runtime
 
 
 def _sr(req, prompt, adapter):
@@ -101,17 +102,10 @@ def test_paging_support_matrix_over_all_configs():
 
 
 # ---------------------------------------------------- paged == contiguous
-@pytest.fixture(scope="module")
-def small_model():
-    cfg = get_smoke("llama2_7b").with_(dtype="float32")
-    params = tf.init_params(jax.random.PRNGKey(0), cfg, lora_adapters=3)
-    return cfg, params
-
-
-def test_paged_decode_matches_contiguous(small_model):
+def test_paged_decode_matches_contiguous(llama_model):
     """The gather-based paged decode must reproduce the ring-cache decode
     logits bit-for-bit (same math, different K/V layout)."""
-    cfg, params = small_model
+    cfg, params = llama_model
     B, T, steps, bs = 2, 8, 6, 4
     toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
                               cfg.vocab_size)
@@ -149,10 +143,10 @@ def test_paged_decode_matches_contiguous(small_model):
         pos = pos + 1
 
 
-def test_paged_kernel_matches_gather_and_contiguous(small_model):
+def test_paged_kernel_matches_gather_and_contiguous(llama_model):
     """In-kernel block-table walk == gather reference == contiguous ring
     decode, across ragged per-row positions and an inactive (-1) row."""
-    cfg, params = small_model
+    cfg, params = llama_model
     B, T, steps, bs = 2, 8, 4, 4
     toks = jax.random.randint(jax.random.PRNGKey(3), (B, T), 0,
                               cfg.vocab_size)
@@ -201,8 +195,8 @@ def test_paged_kernel_matches_gather_and_contiguous(small_model):
         np.testing.assert_allclose(gather[s], kernel[s], atol=1e-5)
 
 
-def test_insert_extract_roundtrip(small_model):
-    cfg, params = small_model
+def test_insert_extract_roundtrip(llama_model):
+    cfg, params = llama_model
     B, T, bs = 2, 8, 4
     toks = jax.random.randint(jax.random.PRNGKey(2), (B, T), 0,
                               cfg.vocab_size)
@@ -226,18 +220,11 @@ def test_insert_extract_roundtrip(small_model):
 
 
 # ------------------------------------------------------------- end-to-end
-def _mk_runtime(cfg, params, **kw):
-    scfg = ServingConfig(num_slots=4, block_size=8, num_blocks=32,
-                         max_blocks_per_slot=6, prefill_chunk=16,
-                         decode_chunk=4, **kw)
-    return ContinuousRuntime(cfg, params, scfg)
-
-
-def test_mid_flight_join_and_leave(small_model):
+def test_mid_flight_join_and_leave(llama_model):
     """A request joins while another is mid-decode; both finish; all blocks
     and slots are reclaimed."""
-    cfg, params = small_model
-    rt = _mk_runtime(cfg, params)
+    cfg, params = llama_model
+    rt = make_runtime(cfg, params)
     rng = np.random.default_rng(0)
 
     def req(rid, out):
@@ -266,12 +253,12 @@ def test_mid_flight_join_and_leave(small_model):
     assert rt.pool.in_use == 0
 
 
-def test_replay_trace_end_to_end(small_model):
+def test_replay_trace_end_to_end(llama_model):
     """Bursty 3-adapter trace through the real engine: every admitted
     request gets first_token set, slots/blocks fully reclaimed, and the
     decode step compiled exactly once after warmup."""
-    cfg, params = small_model
-    rt = _mk_runtime(cfg, params)
+    cfg, params = llama_model
+    rt = make_runtime(cfg, params)
     specs = [TraceSpec(f"fn{i}", "bursty", 1.5, 8.0, prompt_len=12,
                        output_len=8, slo_ttft=5.0) for i in range(3)]
     wl = make_workload(specs, seed=11)
@@ -304,12 +291,12 @@ def test_replay_trace_end_to_end(small_model):
     assert "admit" in kinds and "finish" in kinds
 
 
-def test_oversized_request_rejected_gracefully(small_model):
+def test_oversized_request_rejected_gracefully(llama_model):
     """An oversized request mid-trace must not kill the replay: it is
     counted (stats + breakdown flag), reported failed, and every other
     request is still served (the old path raised ValueError)."""
-    cfg, params = small_model
-    rt = _mk_runtime(cfg, params)
+    cfg, params = llama_model
+    rt = make_runtime(cfg, params)
     specs = [TraceSpec("fn0", "bursty", 2.0, 6.0, prompt_len=12,
                        output_len=6, slo_ttft=30.0)]
     wl = make_workload(specs, seed=3)
@@ -327,12 +314,12 @@ def test_oversized_request_rejected_gracefully(small_model):
     assert rt.slots.num_active == 0 and rt.pool.in_use == 0
 
 
-def test_try_admit_mixed_group_rejects_only_oversized(small_model):
+def test_try_admit_mixed_group_rejects_only_oversized(llama_model):
     """Direct try_admit with a fit + an oversized item: the oversized one
     lands in AdmitResult.rejected (counted once, idempotently), the fit
     one is admitted, and the per-item lists align with the survivors."""
-    cfg, params = small_model
-    rt = _mk_runtime(cfg, params)
+    cfg, params = llama_model
+    rt = make_runtime(cfg, params)
     rng = np.random.default_rng(2)
     ok = Request(req_id=0, fn_id="fn0", arrival=0.0, prompt_len=12,
                  output_len=6, slo_ttft=10.0)
@@ -356,12 +343,12 @@ def test_try_admit_mixed_group_rejects_only_oversized(small_model):
     assert rt.slots.num_active == 0 and rt.pool.in_use == 0
 
 
-def test_prompt_longer_than_chunk_and_any_bucket(small_model):
+def test_prompt_longer_than_chunk_and_any_bucket(llama_model):
     """Prompt length is capped by the block table, not a bucket set: a
     40-token prompt (chunk 16 -> 3 chunk dispatches, longer than the old
     largest bucket 32) is served with ONE prefill compile."""
-    cfg, params = small_model
-    rt = _mk_runtime(cfg, params)
+    cfg, params = llama_model
+    rt = make_runtime(cfg, params)
     rng = np.random.default_rng(9)
     prompt = rng.integers(0, 512, 40, dtype=np.int32)
     req = Request(req_id=0, fn_id="fn0", arrival=0.0, prompt_len=40,
@@ -380,19 +367,18 @@ def test_prompt_longer_than_chunk_and_any_bucket(small_model):
     assert rt.slots.num_active == 0 and rt.pool.in_use == 0
 
 
-def test_stall_does_not_corrupt_output(small_model):
+def test_stall_does_not_corrupt_output(llama_model):
     """A slot that stalls on pool exhaustion must, after resuming, emit
     exactly the tokens it would have emitted with an ample pool (the stall
     chunk's KV writes must be invisible)."""
-    cfg, params = small_model
+    cfg, params = llama_model
     rng = np.random.default_rng(5)
     prompts = [rng.integers(0, 512, 8, dtype=np.int32) for _ in range(2)]
 
     def run(num_blocks):
-        scfg = ServingConfig(num_slots=2, block_size=4,
-                             num_blocks=num_blocks, max_blocks_per_slot=4,
-                             prefill_chunk=8, decode_chunk=4)
-        rt = ContinuousRuntime(cfg, params, scfg)
+        rt = make_runtime(cfg, params, num_slots=2, block_size=4,
+                          num_blocks=num_blocks, max_blocks_per_slot=4,
+                          prefill_chunk=8, decode_chunk=4)
         reqs = [Request(req_id=i, fn_id="fn0", arrival=0.0, prompt_len=8,
                         output_len=9, slo_ttft=10.0) for i in range(2)]
         res = rt.try_admit([_sr(reqs[i], prompts[i], i) for i in range(2)])
@@ -421,11 +407,11 @@ def test_stall_does_not_corrupt_output(small_model):
     assert tight == ample, "stall chunk leaked state into the output"
 
 
-def test_admit_prefill_finish_reports_unbound_slot(small_model):
+def test_admit_prefill_finish_reports_unbound_slot(llama_model):
     """A request that finishes at prefill (output_len == 1) is never bound
     to a slot; AdmitResult must say -1, not a phantom free slot id."""
-    cfg, params = small_model
-    rt = _mk_runtime(cfg, params)
+    cfg, params = llama_model
+    rt = make_runtime(cfg, params)
     rng = np.random.default_rng(1)
     reqs = [Request(req_id=i, fn_id="fn0", arrival=0.0, prompt_len=12,
                     output_len=o, slo_ttft=10.0)
@@ -445,12 +431,12 @@ def test_admit_prefill_finish_reports_unbound_slot(small_model):
     assert rt.slots.num_active == 0 and rt.pool.in_use == 0
 
 
-def test_replay_finish_never_predates_dispatch(small_model):
+def test_replay_finish_never_predates_dispatch(llama_model):
     """Chunks clipped by budget/EOS: the finishing token is stamped at the
     end of the decode dispatch that produced it, so ``done`` can never
     precede the dispatch and TPOT can never go negative."""
-    cfg, params = small_model
-    rt = _mk_runtime(cfg, params)
+    cfg, params = llama_model
+    rt = make_runtime(cfg, params)
     # output 6 with decode_chunk 4: the finishing chunk accepts 2 of 4
     specs = [TraceSpec("fn0", "normal", 2.0, 4.0, prompt_len=12,
                        output_len=6, slo_ttft=30.0)]
@@ -471,17 +457,14 @@ def test_replay_finish_never_predates_dispatch(small_model):
             assert r.done > r.first_token   # TPOT strictly positive
 
 
-def test_sliding_window_served_end_to_end(small_model):
+def test_sliding_window_served_end_to_end(llama_model):
     """A sliding-window config round-trips through the paged runtime with
     the in-kernel window mask, and matches the gather reference path."""
-    cfg, params = small_model
+    cfg, params = llama_model
     swa = cfg.with_(sliding_window=8)
 
     def run(use_kernel):
-        scfg = ServingConfig(num_slots=4, block_size=8, num_blocks=32,
-                             max_blocks_per_slot=6, prefill_chunk=16,
-                             decode_chunk=4, use_kernel=use_kernel)
-        rt = ContinuousRuntime(swa, params, scfg)
+        rt = make_runtime(swa, params, use_kernel=use_kernel)
         specs = [TraceSpec("fn0", "bursty", 2.0, 4.0, prompt_len=12,
                            output_len=8, slo_ttft=30.0)]
         wl = make_workload(specs, seed=5)
@@ -496,10 +479,10 @@ def test_sliding_window_served_end_to_end(small_model):
     run(False)
 
 
-def test_sliding_window_paged_matches_contiguous(small_model):
+def test_sliding_window_paged_matches_contiguous(llama_model):
     """Windowed paged decode (all blocks retained, window masked in-kernel)
     == the contiguous ring cache that physically evicts old positions."""
-    cfg, params = small_model
+    cfg, params = llama_model
     swa = cfg.with_(sliding_window=8)
     B, T, steps, bs = 2, 8, 6, 4
     toks = jax.random.randint(jax.random.PRNGKey(9), (B, T), 0,
@@ -542,14 +525,11 @@ def test_sliding_window_paged_matches_contiguous(small_model):
             pos = pos + 1
 
 
-def test_pool_exhaustion_progress(small_model):
+def test_pool_exhaustion_progress(llama_model):
     """A pool too small for the full working set stalls/aborts but never
     livelocks, and still reclaims every block."""
-    cfg, params = small_model
-    scfg = ServingConfig(num_slots=4, block_size=8, num_blocks=8,
-                         max_blocks_per_slot=6, prefill_chunk=16,
-                         decode_chunk=4)
-    rt = ContinuousRuntime(cfg, params, scfg)
+    cfg, params = llama_model
+    rt = make_runtime(cfg, params, num_blocks=8)
     specs = [TraceSpec("fn0", "bursty", 4.0, 3.0, prompt_len=12,
                        output_len=16, slo_ttft=30.0)]
     wl = make_workload(specs, seed=2)

@@ -12,13 +12,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_smoke
 from repro.kernels.sgmv.ops import sgmv_apply
 from repro.kernels.sgmv.ref import sgmv_ref
-from repro.models import transformer as tf
 from repro.serverless.batching import Request
-from repro.serving import (AdapterConfig, ContinuousRuntime, DecodeConfig,
-                           PrefillConfig, ServeRequest, ServingConfig)
+from repro.serving import (AdapterConfig, DecodeConfig, PrefillConfig,
+                           ServeRequest, ServingConfig)
+
+from conftest import make_runtime
 
 
 def _rand(R=12, D=32, r=4, O=24, N=3, seed=0):
@@ -90,13 +90,9 @@ def test_sgmv_auto_dispatch_off_tpu_is_the_reference():
 
 # ------------------------------------------------- typed admission API
 @pytest.fixture(scope="module")
-def runtime():
-    cfg = get_smoke("llama2_7b").with_(dtype="float32")
-    params = tf.init_params(jax.random.PRNGKey(0), cfg, lora_adapters=3)
-    scfg = ServingConfig(num_slots=4, block_size=8, num_blocks=32,
-                         max_blocks_per_slot=6, prefill_chunk=16,
-                         decode_chunk=4)
-    return ContinuousRuntime(cfg, params, scfg)
+def runtime(llama_model):
+    cfg, params = llama_model
+    return make_runtime(cfg, params)
 
 
 def _req(rid, out=2):

@@ -6,17 +6,15 @@ import dataclasses
 import json
 import time
 
-import jax
 import pytest
 
-from repro.configs import get_smoke
-from repro.models import transformer as tf
 from repro.serverless.traces import TraceSpec, make_workload
-from repro.serving import (ContinuousRuntime, MetricsRegistry, ServingConfig,
-                           Telemetry, replay_trace)
+from repro.serving import MetricsRegistry, Telemetry, replay_trace
 from repro.serving import telemetry as tm
 from repro.serving.metrics import percentile
 from repro.serving.telemetry import host_bubble_fraction
+
+from conftest import FakeTimer, make_runtime
 
 # legacy stats-dict keys every runtime must keep exposing (PR 2-5 scripts,
 # benches and docs index them directly)
@@ -24,34 +22,6 @@ LEGACY_STATS_KEYS = (
     "prompt_tokens", "prefill_tokens", "recomputed_tokens", "shared_tokens",
     "shared_block_maps", "prefill_chunks", "rejected_too_long",
     "reclaimed_blocks")
-
-
-@pytest.fixture(scope="module")
-def small_model():
-    cfg = get_smoke("llama2_7b").with_(dtype="float32")
-    params = tf.init_params(jax.random.PRNGKey(0), cfg, lora_adapters=3)
-    return cfg, params
-
-
-class FakeTimer:
-    """Deterministic monotonic clock: every call advances by ``step``.
-    Two replays that take the SAME timer-call sequence read the SAME
-    wall times — the probe for 'telemetry never touches the clock'."""
-
-    def __init__(self, step: float = 1e-4):
-        self.step = step
-        self.calls = 0
-
-    def __call__(self) -> float:
-        self.calls += 1
-        return self.calls * self.step
-
-
-def _mk_runtime(cfg, params, **kw):
-    scfg = ServingConfig(num_slots=4, block_size=8, num_blocks=32,
-                         max_blocks_per_slot=6, prefill_chunk=16,
-                         decode_chunk=4)
-    return ContinuousRuntime(cfg, params, scfg, **kw)
 
 
 def _workload(duration: float = 4.0, seed: int = 11):
@@ -62,7 +32,7 @@ def _workload(duration: float = 4.0, seed: int = 11):
 
 def _replay(cfg, params, *, telemetry=None, timer=None):
     kw = {"timer": timer} if timer is not None else {}
-    rt = _mk_runtime(cfg, params, **kw)
+    rt = make_runtime(cfg, params, **kw)
     wl, fa = _workload()
     res, events = replay_trace(rt, [dict(w) for w in wl], fa, seed=3,
                                collect_events=True, slo_abandon=False,
@@ -128,19 +98,19 @@ def test_host_bubble_fraction_pure():
 
 
 # ------------------------------------------------ replay-level invariants
-def test_legacy_stats_keys_still_present(small_model):
-    cfg, params = small_model
-    rt = _mk_runtime(cfg, params)
+def test_legacy_stats_keys_still_present(llama_model):
+    cfg, params = llama_model
+    rt = make_runtime(cfg, params)
     for key in LEGACY_STATS_KEYS + ("decode_chunks", "stall_steps"):
         assert key in rt.stats, f"stats counter {key} vanished"
         assert rt.stats[key] == 0
 
 
-def test_replay_bitwise_identical_with_and_without_telemetry(small_model):
+def test_replay_bitwise_identical_with_and_without_telemetry(llama_model):
     """Attaching a recorder must not perturb replay: the runtime takes the
     identical timer-call sequence either way, so with a deterministic
     clock the SimResult (and event log) must match bit for bit."""
-    cfg, params = small_model
+    cfg, params = llama_model
     _, res_off, ev_off = _replay(cfg, params, timer=FakeTimer())
     tele = Telemetry()
     _, res_on, ev_on = _replay(cfg, params, telemetry=tele,
@@ -152,8 +122,8 @@ def test_replay_bitwise_identical_with_and_without_telemetry(small_model):
     assert tele.spans, "instrumented replay recorded no spans"
 
 
-def test_span_sequence_deterministic(small_model):
-    cfg, params = small_model
+def test_span_sequence_deterministic(llama_model):
+    cfg, params = llama_model
     runs = []
     for _ in range(2):
         tele = Telemetry()
@@ -166,11 +136,11 @@ def test_span_sequence_deterministic(small_model):
            [dataclasses.asdict(i) for i in runs[1].instants]
 
 
-def test_ttft_tpot_reconstructible_from_spans(small_model):
+def test_ttft_tpot_reconstructible_from_spans(llama_model):
     """Acceptance: the trace alone reconstructs EXACT per-request TTFT and
     TPOT — queued starts at arrival, prefill ends at first_token, the last
     decode span of a finished request ends at done."""
-    cfg, params = small_model
+    cfg, params = llama_model
     tele = Telemetry()
     _, res, _ = _replay(cfg, params, telemetry=tele, timer=FakeTimer())
     queued = {s.args["req_id"]: s for s in tele.spans
@@ -198,8 +168,8 @@ def test_ttft_tpot_reconstructible_from_spans(small_model):
                 (r.done - r.first_token) / (r.output_len - 1))
 
 
-def test_latency_histograms_match_simresult(small_model):
-    cfg, params = small_model
+def test_latency_histograms_match_simresult(llama_model):
+    cfg, params = llama_model
     rt, res, _ = _replay(cfg, params, timer=FakeTimer())
     snap = rt.metrics_snapshot()
     served = [r for r in res.requests if r.first_token >= 0]
@@ -217,8 +187,8 @@ def test_latency_histograms_match_simresult(small_model):
         assert key in snap["counters"]
 
 
-def test_chrome_trace_valid_json_monotone_per_track(small_model, tmp_path):
-    cfg, params = small_model
+def test_chrome_trace_valid_json_monotone_per_track(llama_model, tmp_path):
+    cfg, params = llama_model
     tele = Telemetry()
     _replay(cfg, params, telemetry=tele, timer=FakeTimer())
     path = tmp_path / "trace.json"
@@ -243,12 +213,12 @@ def test_chrome_trace_valid_json_monotone_per_track(small_model, tmp_path):
         last_ts[tid] = e["ts"]
 
 
-def test_telemetry_overhead_within_10_percent(small_model):
+def test_telemetry_overhead_within_10_percent(llama_model):
     """CI guard: an instrumented replay must cost <= 1.1x the uninstrumented
     one (median of 3, small absolute slack for clock jitter on the short
     trace) — telemetry is supposed to be a recorder, not a tax."""
-    cfg, params = small_model
-    rt = _mk_runtime(cfg, params)
+    cfg, params = llama_model
+    rt = make_runtime(cfg, params)
     wl, fa = _workload()
 
     def once(instrumented: bool) -> float:
